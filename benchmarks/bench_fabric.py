@@ -1,0 +1,30 @@
+"""Fabric: collective cost model on the PF(17) pod placement (the paper as
+training interconnect) + contention evidence."""
+from repro.fabric import (all_to_all, best_allreduce, place_pod,
+                          polar2phase_allreduce, rhd_allreduce, ring_allreduce)
+
+from .common import emit, timed
+
+
+def run():
+    pod, us = timed(lambda: place_pod(16, 16, 17))
+    emit("fabric.place_pod.pf17", us, f"spares={len(pod.spares)}")
+    for nbytes, tag in ((1e6, "1MB"), (1e9, "1GB")):
+        for axis in ("model", "data"):
+            r = ring_allreduce(pod, axis, nbytes)
+            h = rhd_allreduce(pod, axis, nbytes)
+            best = best_allreduce(pod, axis, nbytes)
+            emit(f"fabric.allreduce.{axis}.{tag}", 0.0,
+                 f"ring={r.seconds*1e6:.0f}us(L={r.max_link_load});"
+                 f"rhd={h.seconds*1e6:.0f}us(L={h.max_link_load});"
+                 f"best={best.algorithm}")
+    p2 = polar2phase_allreduce(pod, 1e9)
+    emit("fabric.allreduce.fullmesh.polar2phase.1GB", 0.0,
+         f"{p2.seconds*1e6:.0f}us;L={p2.max_link_load}")
+    a2a = all_to_all(pod, "model", 1e8)
+    emit("fabric.a2a.model.100MB", 0.0,
+         f"{a2a.seconds*1e6:.0f}us;L={a2a.max_link_load}")
+
+
+if __name__ == "__main__":
+    run()

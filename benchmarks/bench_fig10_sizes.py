@@ -1,0 +1,25 @@
+"""Fig. 10: PolarFly size scaling q in {13, 19, 25, 31} under uniform."""
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
+
+from .common import emit, timed
+
+
+def run():
+    for q in (13, 19, 25, 31):
+        pf = build_polarfly(q)
+        rt = build_routing(pf.graph, pf)
+        p = (q + 1) // 2
+        for mode in ("min", "ugal_pf"):
+            # exact all-pairs for min (single path per flow); sampled for
+            # the adaptive mode (memory: F x K x L edge ids)
+            mf = 1_200_000 if mode == "min" else 150_000
+            pat = make_pattern("uniform", rt, p=p, seed=0, max_flows=mf)
+            fp = build_flow_paths(rt, pat, mode, k_candidates=8, seed=0)
+            sat, us = timed(lambda: saturation_throughput(fp, tol=0.02))
+            emit(f"fig10.pf{q}.{mode}", us, f"N={pf.n};sat={sat:.3f}")
+
+
+if __name__ == "__main__":
+    run()

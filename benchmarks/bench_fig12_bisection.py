@@ -1,0 +1,24 @@
+"""Fig. 12: bisection cut fraction (spectral+KL; METIS unavailable)."""
+from repro.core import topologies as tp
+from repro.core.metrics import bisection_fraction
+from repro.core.polarfly import build_polarfly
+
+from .common import emit, timed
+
+
+def run():
+    graphs = {
+        "PF17": build_polarfly(17).graph,
+        "PF31": build_polarfly(31).graph,
+        "SF11": tp.build_slimfly(11),
+        "DF1": tp.build_dragonfly(12, 6),
+        "JF": tp.build_jellyfish(307, 18, seed=0),
+        "FT18": tp.build_fat_tree(18, 3),
+    }
+    for name, g in graphs.items():
+        frac, us = timed(lambda: bisection_fraction(g))
+        emit(f"fig12.bisection.{name}", us, f"cut_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Fig. 14: diameter/ASPL under random link failures."""
+from repro.core import topologies as tp
+from repro.core.metrics import resilience_sweep
+from repro.core.polarfly import build_polarfly
+
+from .common import emit, timed
+
+
+def run():
+    graphs = {"PF13": build_polarfly(13).graph,
+              "SF9": tp.build_slimfly(9),
+              "JF": tp.build_jellyfish(183, 14, seed=0),
+              "DF1": tp.build_dragonfly(6, 3)}
+    fracs = [0.05, 0.2, 0.4, 0.55]
+    for name, g in graphs.items():
+        pts, us = timed(lambda: resilience_sweep(g, fracs, seed=1))
+        summary = ";".join(f"f{int(p.fail_fraction*100)}:d={p.diameter}"
+                           for p in pts)
+        emit(f"fig14.resilience.{name}", us, summary)
+
+
+if __name__ == "__main__":
+    run()

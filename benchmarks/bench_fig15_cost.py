@@ -1,0 +1,31 @@
+"""Fig. 15 / SX: OIO cost per node normalized to PolarFly (1024-node class,
+iso injection bandwidth).  Cost proxy = optical ports per endpoint, divided
+by achievable saturation under each traffic class."""
+from .common import emit
+
+# ports per node (paper SX): PF/SF 32 links via 4 OIO; DF 48 via 6 OIO;
+# FT: 10-level construction, 512 switches/level + 2 OIO per endpoint.
+PORTS = {"PF": 32, "SF": 35, "DF": 48}
+SAT_UNIFORM = {"PF": 0.93, "SF": 0.90, "DF": 0.90, "FT": 0.99}
+SAT_PERM = {"PF": 0.50, "SF": 0.40, "DF": 0.35, "FT": 0.99}
+N = 1024
+
+
+def run():
+    # Fat tree per paper SX: 10 levels x 512 switches x 32 links + endpoints
+    ft_ports = (10 * 512 * 32 + N * 16) / N
+    base_u = PORTS["PF"] / SAT_UNIFORM["PF"]
+    base_p = PORTS["PF"] / SAT_PERM["PF"]
+    for name in ("PF", "SF", "DF"):
+        emit(f"fig15.cost.{name}.uniform", 0.0,
+             f"{(PORTS[name]/SAT_UNIFORM[name])/base_u:.2f}x")
+        emit(f"fig15.cost.{name}.perm", 0.0,
+             f"{(PORTS[name]/SAT_PERM[name])/base_p:.2f}x")
+    emit("fig15.cost.FT.uniform", 0.0, f"{(ft_ports/SAT_UNIFORM['FT'])/base_u:.2f}x"
+         " (paper: 5.19x)")
+    emit("fig15.cost.FT.perm", 0.0, f"{(ft_ports/SAT_PERM['FT'])/base_p:.2f}x"
+         " (paper: 2.68x)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,20 @@
+"""Fig. 1: feasible network radixes, PolarFly vs Slim Fly."""
+from repro.core.metrics import polarfly_feasible_degrees, slimfly_feasible_degrees
+
+from .common import emit, timed
+
+
+def run():
+    for kmax in (64, 128, 256, 512, 1024):
+        (pf, sf), us = timed(lambda: (polarfly_feasible_degrees(kmax),
+                                      slimfly_feasible_degrees(kmax)))
+        emit(f"fig1.feasible_degrees.kmax{kmax}", us,
+             f"pf={len(pf)};sf={len(sf)};ratio={len(pf)/max(1,len(sf)):.2f}")
+    # paper-called-out radixes
+    feas = set(polarfly_feasible_degrees(128))
+    emit("fig1.radixes_32_48_128_feasible", 0.0,
+         all(k in feas for k in (32, 48, 128)))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig. 2: Moore-bound efficiency of direct diameter-2 topologies."""
+from repro.core.gf import primes_and_prime_powers
+from repro.core.polarfly import moore_bound
+
+from .common import emit
+
+
+def run():
+    # PolarFly: N = q^2+q+1 at k = q+1; Slim Fly: N = 2q^2 at k = (3q-d)/2
+    for q in (7, 19, 31, 61, 127):
+        k = q + 1
+        eff = (q * q + q + 1) / moore_bound(k, 2)
+        emit(f"fig2.polarfly.q{q}", 0.0, f"k={k};eff={eff:.4f}")
+    for q in (19, 31, 61):  # delta=-1/+1 cases
+        delta = 1 if (q - 1) % 4 == 0 else -1
+        k = (3 * q - delta) // 2
+        eff = 2 * q * q / moore_bound(k, 2)
+        emit(f"fig2.slimfly.q{q}", 0.0, f"k={k};eff={eff:.4f}")
+    # asymptotics: PF -> 1, SF -> 8/9
+    q = 1009
+    emit("fig2.asymptote.pf", 0.0,
+         f"{(q*q+q+1)/moore_bound(q+1,2):.4f} (paper: ->1)")
+    emit("fig2.asymptote.sf", 0.0,
+         f"{2*q*q/moore_bound((3*q-1)//2,2):.4f} (paper: ->8/9={8/9:.4f})")
+
+
+if __name__ == "__main__":
+    run()

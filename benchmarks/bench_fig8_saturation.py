@@ -1,0 +1,39 @@
+"""Fig. 8 / Table V: saturation throughput across topologies x patterns x
+routing.  Scaled configuration (q=13-class, ~200 routers, p:radix = 1:2) --
+the paper's own Fig. 10 shows PolarFly behavior is size-stable."""
+import numpy as np
+
+from repro.core import topologies as tp
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
+
+from .common import emit, timed
+
+CONFIGS = {
+    "PF": lambda: (build_polarfly(13).graph, build_polarfly(13)),
+    "SF": lambda: (tp.build_slimfly(9), None),          # 162 routers, radix 13
+    "DF1": lambda: (tp.build_dragonfly(6, 3), None),    # 114 routers, radix 8
+    "JF": lambda: (tp.build_jellyfish(183, 14, seed=0), None),
+    "FT": lambda: (tp.build_fat_tree(8, 3), None),      # 192 switches
+}
+
+
+def run():
+    for name, factory in CONFIGS.items():
+        g, pf = factory()
+        rt = build_routing(g, pf)
+        hosts = (np.arange(g.params["leaf_switches"], dtype=np.int32)
+                 if name == "FT" else None)
+        p = max(2, g.params.get("radix", 8) // 2)
+        for pattern in ("uniform", "random_perm"):
+            pat = make_pattern(pattern, rt, p=p, hosts=hosts, seed=0)
+            modes = ["ecmp"] if name == "FT" else ["min", "ugal", "ugal_pf"]
+            for mode in modes:
+                fp = build_flow_paths(rt, pat, mode, k_candidates=10, seed=0)
+                sat, us = timed(lambda: saturation_throughput(fp, tol=0.01))
+                emit(f"fig8.{name}.{pattern}.{mode}", us, f"sat={sat:.3f}")
+
+
+if __name__ == "__main__":
+    run()

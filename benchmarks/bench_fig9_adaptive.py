@@ -1,0 +1,24 @@
+"""Fig. 9: UGAL vs UGAL_PF on Perm1Hop / Perm2Hop."""
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import (build_flow_paths, evaluate_load, make_pattern,
+                              saturation_throughput)
+
+from .common import emit, timed
+
+
+def run():
+    pf = build_polarfly(13)
+    rt = build_routing(pf.graph, pf)
+    for pattern in ("perm1hop", "perm2hop", "tornado", "random_perm"):
+        pat = make_pattern(pattern, rt, p=7, seed=0)
+        for mode in ("min", "ugal", "ugal_pf"):
+            fp = build_flow_paths(rt, pat, mode, k_candidates=10, seed=0)
+            sat, us = timed(lambda: saturation_throughput(fp, tol=0.01))
+            lat = evaluate_load(fp, 0.9 * max(sat, 0.02)).mean_latency
+            emit(f"fig9.{pattern}.{mode}", us,
+                 f"sat={sat:.3f};lat90={lat:.1f}cyc")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference wall time and
+derived work rates.  On CPU these measure correctness-path overhead; TPU
+rates come from the roofline analysis."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.gf_crossprod.ops import crossprod_normalized
+from repro.kernels.minplus.ops import minplus
+from repro.kernels.minplus.ref import minplus_ref
+
+from .common import emit, timed
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n = 256
+    a = jnp.asarray(rng.random((n, n), np.float32) * 9)
+    b = jnp.asarray(rng.random((n, n), np.float32) * 9)
+    ref = jax.jit(minplus_ref)
+    ref(a, b).block_until_ready()
+    _, us = timed(lambda: ref(a, b).block_until_ready(), repeats=5)
+    emit("kernels.minplus.jnp_ref.n256", us, f"{2*n**3/us*1e6/1e9:.2f}Gop/s")
+    _, us = timed(lambda: minplus(a, b, use_pallas=True).block_until_ready())
+    emit("kernels.minplus.pallas_interpret.n256", us, "correctness-path")
+
+    vt = rng.integers(0, 31, size=(307, 3)).astype(np.int32)
+    _, us = timed(lambda: np.asarray(crossprod_normalized(vt, vt, 31, use_pallas=False)))
+    emit("kernels.gf_crossprod.jnp_ref.n307", us,
+         f"{307*307/us:.1f}Mpairs/s" if us else "-")
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 128)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 128)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 1024, 128)), jnp.bfloat16)
+    f = jax.jit(lambda q, k, v: attention(q, k, v, causal=True))
+    f(q, k, v).block_until_ready()
+    _, us = timed(lambda: f(q, k, v).block_until_ready(), repeats=3)
+    flops = 4 * 1 * 8 * 1024 * 1024 * 128 / 2  # causal
+    emit("kernels.attention.jnp_ref.s1024", us, f"{flops/us*1e6/1e12:.3f}TF/s")
+
+
+if __name__ == "__main__":
+    run()

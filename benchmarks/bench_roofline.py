@@ -1,0 +1,38 @@
+"""Roofline summary from the dry-run results directory (§Roofline table)."""
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(RESULTS, "*.json")))
+    if not files:
+        emit("roofline.no_results", 0.0,
+             "run: python -m repro.launch.dryrun --all")
+        return
+    for p in files:
+        base = os.path.basename(p)[:-5]
+        if len(base.split("__")) > 3:
+            continue  # tagged experiment files
+        r = json.load(open(p))
+        if r.get("skipped"):
+            emit(f"roofline.{base}", 0.0, "skipped(long-context-inapplicable)")
+            continue
+        if not r.get("ok"):
+            emit(f"roofline.{base}", 0.0, f"FAILED:{r.get('error','?')[:50]}")
+            continue
+        t = r.get("roofline_flash", r["roofline"])
+        emit(f"roofline.{base}", r.get("compile_s", 0) * 1e6,
+             f"dom={t['dominant']};comp={t['compute_s']:.3g}s;"
+             f"mem={t['memory_s']:.3g}s;coll={t['collective_s']:.3g}s;"
+             f"frac={t['roofline_fraction']:.3f};"
+             f"fit={r['memory'].get('fits_16GB')}/"
+             f"{r['memory'].get('fits_16GB_tpu_estimate')}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Table VI: path diversity (lengths 1-4) between vertex classes."""
+from collections import Counter
+
+from repro.core.metrics import count_3paths_avoiding, count_paths_upto4
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+
+from .common import emit, timed
+
+
+def run():
+    q = 7
+    pf = build_polarfly(q)
+    rt = build_routing(pf.graph, pf)
+    W = set(int(x) for x in pf.quadrics)
+
+    def census():
+        rows = Counter()
+        for v in range(pf.n):
+            for w in range(v + 1, pf.n):
+                c = count_paths_upto4(pf.graph, v, w)
+                if rt.dist[v, w] == 1:
+                    quad = v in W or w in W
+                    rows[("adj", "quad" if quad else "nonquad",
+                          c[1], c[2])] += 1
+                else:
+                    x = pf.intermediate(v, w)
+                    c3 = count_3paths_avoiding(pf.graph, v, w, x)
+                    rows[("nonadj", "xq" if x in W else "xnq", c[2], c3)] += 1
+        return rows
+
+    rows, us = timed(census)
+    for key, n in sorted(rows.items()):
+        kind, cls, a, b = key
+        if kind == "adj":
+            emit(f"table6.q{q}.adjacent.{cls}", us / max(len(rows), 1),
+                 f"pairs={n};len1={a};len2_alt={b} (paper: 1 and "
+                 f"{'0' if cls == 'quad' else '1'})")
+        else:
+            emit(f"table6.q{q}.nonadjacent.{cls}", us / max(len(rows), 1),
+                 f"pairs={n};len2={a};len3_avoiding_mid={b} "
+                 f"(paper: 1 and {'q=7' if cls == 'xq' else 'q-1=6'})")
+
+
+if __name__ == "__main__":
+    run()

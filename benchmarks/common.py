@@ -1,0 +1,23 @@
+"""Shared benchmark harness: timing + CSV emission.
+
+Every bench prints `name,us_per_call,derived` rows; `derived` carries the
+paper-relevant quantity (saturation, fraction, count, ...).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def timed(fn: Callable, repeats: int = 1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

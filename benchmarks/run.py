@@ -1,0 +1,43 @@
+"""Run every benchmark; one per paper table/figure + kernels/fabric/roofline.
+Prints `name,us_per_call,derived` CSV."""
+import importlib
+import sys
+import traceback
+
+BENCHES = [
+    "bench_fig1_feasible_degrees",
+    "bench_fig2_moore",
+    "bench_table2_triangles",
+    "bench_table6_diversity",
+    "bench_fig8_saturation",
+    "bench_fig9_adaptive",
+    "bench_fig10_sizes",
+    "bench_fig11_expansion",
+    "bench_fig12_bisection",
+    "bench_fig14_resilience",
+    "bench_fig15_cost",
+    "bench_fabric",
+    "bench_kernels",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    only = sys.argv[1:] or None
+    for mod in BENCHES:
+        if only and not any(o in mod for o in only):
+            continue
+        try:
+            importlib.import_module(f"benchmarks.{mod}").run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{mod},0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: build PolarFly, inspect its structure, route, expand.
+
+  PYTHONPATH=src python examples/quickstart.py [q]
+"""
+import sys
+
+from repro.core.expansion import expand
+from repro.core.layout import build_layout
+from repro.core.metrics import bisection_fraction, diameter_and_aspl, triangle_census
+from repro.core.polarfly import build_polarfly, moore_efficiency
+from repro.core.routing import build_routing, minimal_path
+
+
+def main():
+    q = int(sys.argv[1]) if len(sys.argv) > 1 else 17
+    pf = build_polarfly(q)
+    diam, aspl = diameter_and_aspl(pf.graph)
+    print(f"PolarFly ER_{q}: N={pf.n} radix={pf.degree} diameter={diam} "
+          f"ASPL={aspl:.3f} MooreEff={moore_efficiency(pf.n, pf.degree):.3f}")
+    print(f"  quadrics |W|={len(pf.quadrics)}  |V1|={len(pf.v1)}  |V2|={len(pf.v2)}")
+    print(f"  triangles={triangle_census(pf.graph)}  "
+          f"bisection cut fraction={bisection_fraction(pf.graph):.3f}")
+
+    lay = build_layout(pf)
+    m = lay.inter_cluster_edge_counts()
+    print(f"  layout: {lay.num_clusters} racks; quadric-rack links={m[0,1]} "
+          f"per rack; rack-to-rack links={m[1,2]} (paper: q+1={q+1}, q-2={q-2})")
+
+    rt = build_routing(pf.graph, pf)
+    s, d = 0, pf.n // 2
+    print(f"  min route {s}->{d}: {minimal_path(rt.next_hop, s, d)} "
+          f"(algebraic GF({q}) cross product)")
+
+    st = expand(lay, 2, "nonquadric")
+    diam2, aspl2 = diameter_and_aspl(st.graph)
+    print(f"  after 2 rack replications (no rewiring): N={st.graph.n} "
+          f"diameter={diam2} ASPL={aspl2:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Batched autoregressive serving demo with KV caches (reduced gemma2:
+alternating local/global attention exercises the rolling-window cache).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv += ["--arch", "gemma2-9b", "--batch", "4", "--prompt-len", "8",
+                 "--tokens", "24", "--temperature", "0.8"]
+    main()

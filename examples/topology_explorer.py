@@ -1,0 +1,38 @@
+"""Compare PolarFly against Slim Fly / Dragonfly / Jellyfish: saturation
+under uniform + adversarial traffic, bisection, and resilience.
+
+  PYTHONPATH=src python examples/topology_explorer.py
+"""
+from repro.core import topologies as tp
+from repro.core.metrics import bisection_fraction, resilience_sweep
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
+
+
+def main():
+    graphs = {
+        "PolarFly(13)": (build_polarfly(13).graph, build_polarfly(13)),
+        "SlimFly(9)": (tp.build_slimfly(9), None),
+        "Dragonfly(6,3)": (tp.build_dragonfly(6, 3), None),
+        "Jellyfish(183,14)": (tp.build_jellyfish(183, 14, seed=0), None),
+    }
+    print(f"{'topology':20s} {'N':>5s} {'radix':>5s} {'unif(min)':>9s} "
+          f"{'adv(min)':>8s} {'adv(UGAL)':>9s} {'bisect':>7s} {'diam@20%fail':>12s}")
+    for name, (g, pf) in graphs.items():
+        rt = build_routing(g, pf)
+        p = max(2, g.params.get("radix", 8) // 2)
+        uni = make_pattern("uniform", rt, p=p, seed=0)
+        adv = make_pattern("random_perm", rt, p=p, seed=0)
+        s_uni = saturation_throughput(build_flow_paths(rt, uni, "min"), tol=0.02)
+        s_adv = saturation_throughput(build_flow_paths(rt, adv, "min"), tol=0.02)
+        s_ug = saturation_throughput(
+            build_flow_paths(rt, adv, "ugal", k_candidates=10), tol=0.02)
+        bis = bisection_fraction(g)
+        res = resilience_sweep(g, [0.2], seed=0)[0].diameter
+        print(f"{name:20s} {g.n:5d} {g.params.get('radix','?'):>5} "
+              f"{s_uni:9.3f} {s_adv:8.3f} {s_ug:9.3f} {bis:7.3f} {res:12d}")
+
+
+if __name__ == "__main__":
+    main()

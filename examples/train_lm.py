@@ -1,0 +1,18 @@
+"""End-to-end training demo: a reduced qwen2-0.5b on Markov data with
+checkpointing and injected-failure restart.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+Crash/resume demo:
+  PYTHONPATH=src python examples/train_lm.py --steps 60 --fail-at 30
+  PYTHONPATH=src python examples/train_lm.py --steps 60   # resumes at 40
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "200"]
+    sys.argv += ["--arch", "qwen2-0.5b", "--batch", "16", "--seq", "64",
+                 "--ckpt-every", "20"]
+    main()

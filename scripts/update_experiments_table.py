@@ -1,0 +1,19 @@
+"""Inject the current roofline table into EXPERIMENTS.md (between markers)."""
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.roofline import format_table, load_results  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+results = load_results(os.path.join(ROOT, "results", "dryrun"))
+table = format_table(results)
+path = os.path.join(ROOT, "EXPERIMENTS.md")
+text = open(path).read()
+new = re.sub(r"<!-- ROOFLINE_TABLE_BEGIN -->.*<!-- ROOFLINE_TABLE_END -->",
+             "<!-- ROOFLINE_TABLE_BEGIN -->\n" + table +
+             "\n<!-- ROOFLINE_TABLE_END -->",
+             text, flags=re.S)
+open(path, "w").write(new)
+print(f"updated table with {len(results)} cells")

@@ -1,0 +1,1 @@
+"""PolarFly reproduction + training framework."""

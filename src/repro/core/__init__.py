@@ -1,0 +1,5 @@
+"""The paper's contribution: ER_q polarity graphs, layout, routing,
+expansion, metrics, and the comparison topologies."""
+from .polarfly import PolarFly, build_polarfly, moore_bound, moore_efficiency  # noqa: F401
+from .layout import Layout, build_layout  # noqa: F401
+from .graph import Graph, GraphBuilder  # noqa: F401

@@ -1,0 +1,117 @@
+"""Lightweight undirected-graph container shared by all topologies.
+
+Host-side (numpy) representation: neighbor lists + an optional dense boolean
+adjacency.  Everything downstream (metrics, simulator, fabric) consumes this.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["Graph", "GraphBuilder"]
+
+
+@dataclass
+class Graph:
+    name: str
+    n: int
+    neighbors: List[np.ndarray]  # sorted int32 arrays, no self loops
+    params: Dict[str, Any] = field(default_factory=dict)
+    # optional vertex annotations (e.g. PolarFly vertex vectors / classes)
+    labels: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    # -- basic quantities ------------------------------------------------------
+    @functools.cached_property
+    def degrees(self) -> np.ndarray:
+        return np.array([len(nb) for nb in self.neighbors], dtype=np.int64)
+
+    @functools.cached_property
+    def num_edges(self) -> int:
+        return int(self.degrees.sum()) // 2
+
+    @functools.cached_property
+    def max_degree(self) -> int:
+        return int(self.degrees.max())
+
+    @functools.cached_property
+    def adjacency(self) -> np.ndarray:
+        """Dense boolean adjacency [n, n]."""
+        a = np.zeros((self.n, self.n), dtype=bool)
+        for u, nb in enumerate(self.neighbors):
+            a[u, nb] = True
+        return a
+
+    @functools.cached_property
+    def edge_list(self) -> np.ndarray:
+        """[E, 2] int32, u < v."""
+        out = []
+        for u, nb in enumerate(self.neighbors):
+            for v in nb:
+                if u < v:
+                    out.append((u, v))
+        return np.array(out, dtype=np.int32).reshape(-1, 2)
+
+    def has_edge(self, u: int, v: int) -> bool:
+        nb = self.neighbors[u]
+        i = np.searchsorted(nb, v)
+        return i < len(nb) and nb[i] == v
+
+    def subgraph_without_edges(self, removed: np.ndarray) -> "Graph":
+        """Copy of the graph with the given [k, 2] edges removed."""
+        rem = {(int(u), int(v)) for u, v in removed} | {(int(v), int(u)) for u, v in removed}
+        nbs = []
+        for u, nb in enumerate(self.neighbors):
+            nbs.append(np.array([v for v in nb if (u, int(v)) not in rem], dtype=np.int32))
+        return Graph(self.name + "-damaged", self.n, nbs, dict(self.params))
+
+    def validate(self) -> None:
+        """Symmetry + no self loops + sorted neighbor lists."""
+        for u, nb in enumerate(self.neighbors):
+            assert np.all(np.diff(nb) > 0), f"neighbors of {u} not strictly sorted"
+            assert u not in nb, f"self loop at {u}"
+            for v in nb:
+                assert self.has_edge(int(v), u), f"asymmetric edge ({u},{v})"
+
+
+class GraphBuilder:
+    """Mutable adjacency-set builder -> frozen Graph."""
+
+    def __init__(self, name: str, n: int):
+        self.name = name
+        self.adj: List[set] = [set() for _ in range(n)]
+        self.params: Dict[str, Any] = {}
+        self.labels: Dict[str, np.ndarray] = {}
+
+    @classmethod
+    def from_graph(cls, g: Graph, name: Optional[str] = None) -> "GraphBuilder":
+        b = cls(name or g.name, g.n)
+        for u, nb in enumerate(g.neighbors):
+            b.adj[u] = set(int(v) for v in nb)
+        b.params = dict(g.params)
+        b.labels = dict(g.labels)
+        return b
+
+    @property
+    def n(self) -> int:
+        return len(self.adj)
+
+    def add_vertex(self) -> int:
+        self.adj.append(set())
+        return len(self.adj) - 1
+
+    def add_edge(self, u: int, v: int) -> None:
+        if u == v:
+            raise ValueError(f"self loop at {u}")
+        self.adj[u].add(v)
+        self.adj[v].add(u)
+
+    def has_edge(self, u: int, v: int) -> bool:
+        return v in self.adj[u]
+
+    def freeze(self) -> Graph:
+        nbs = [np.array(sorted(s), dtype=np.int32) for s in self.adj]
+        return Graph(self.name, len(nbs), nbs, dict(self.params), dict(self.labels))

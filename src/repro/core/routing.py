@@ -1,0 +1,177 @@
+"""Routing for PolarFly and baseline topologies (paper §VII).
+
+* minimal static routing: the unique 1- or 2-hop path in ER_q; computed
+  algebraically via the GF(q) cross product (§IV-D) for PolarFly, or via BFS
+  next-hop tables for arbitrary graphs.
+* Valiant (§VII-B): random intermediate router, two minimal segments (<=4 hops).
+* Compact Valiant: intermediate drawn from N(source); <=3 hops; only used
+  when source and destination are not adjacent (paper's bounce-back rule).
+* UGAL / UGAL_PF (§VII-C): per-packet min-vs-valiant decision from local
+  queue occupancy; UGAL_PF uses Compact Valiant + a 2/3 adaptation threshold.
+  (The queue-driven decision itself lives in repro.simulation.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from .graph import Graph
+from .polarfly import PolarFly
+
+__all__ = [
+    "bfs_distances",
+    "all_pairs_distances",
+    "next_hop_table",
+    "polarfly_next_hop_table",
+    "RoutingTables",
+    "build_routing",
+    "minimal_path",
+    "valiant_path",
+    "compact_valiant_candidates",
+]
+
+
+def bfs_distances(g: Graph, src: int) -> np.ndarray:
+    """Single-source BFS distances (int16, -1 = unreachable)."""
+    dist = -np.ones(g.n, dtype=np.int16)
+    dist[src] = 0
+    frontier = [src]
+    d = 0
+    while frontier:
+        d += 1
+        nxt = []
+        for u in frontier:
+            for v in g.neighbors[u]:
+                v = int(v)
+                if dist[v] < 0:
+                    dist[v] = d
+                    nxt.append(v)
+        frontier = nxt
+    return dist
+
+
+def all_pairs_distances(g: Graph) -> np.ndarray:
+    """[n, n] int16 distance matrix via boolean-matrix BFS (vectorized)."""
+    n = g.n
+    adj = g.adjacency
+    dist = np.full((n, n), -1, dtype=np.int16)
+    np.fill_diagonal(dist, 0)
+    reach = np.eye(n, dtype=bool)
+    frontier = np.eye(n, dtype=bool)
+    d = 0
+    while frontier.any():
+        d += 1
+        nxt = (frontier @ adj) & ~reach
+        dist[nxt] = d
+        reach |= nxt
+        frontier = nxt
+    return dist
+
+
+def next_hop_table(g: Graph, dist: Optional[np.ndarray] = None) -> np.ndarray:
+    """[n, n] int32 next-hop table for minimal routing on any graph.
+
+    nh[s, d] = neighbor of s on a shortest s->d path (lowest-id tie break;
+    deterministic).  nh[s, s] = s; unreachable -> -1.
+    """
+    if dist is None:
+        dist = all_pairs_distances(g)
+    n = g.n
+    nh = -np.ones((n, n), dtype=np.int32)
+    np.fill_diagonal(nh, np.arange(n))
+    for s in range(n):
+        nbs = g.neighbors[s]
+        if len(nbs) == 0:
+            continue
+        # next hop: neighbor v minimizing dist[v, d]
+        dn = dist[nbs]  # [deg, n]
+        ok = dn >= 0
+        dn = np.where(ok, dn, np.int16(32000))
+        best = np.argmin(dn, axis=0)  # [n]
+        cand = nbs[best]
+        reachable = dist[s] >= 0
+        good = dn[best, np.arange(n)] == dist[s] - 1
+        nh[s] = np.where(reachable & good, cand, nh[s])
+        nh[s, s] = s
+    return nh
+
+
+def polarfly_next_hop_table(pf: PolarFly) -> np.ndarray:
+    """Minimal next-hop table for ER_q from the algebraic construction:
+    adjacent -> d; non-adjacent -> the unique cross-product intermediate.
+    Matches `next_hop_table` up to tie-breaking (PolarFly min paths are unique,
+    so it matches exactly for s != d)."""
+    n = pf.n
+    adj = pf.graph.adjacency
+    inter = pf.intermediates_all_pairs()  # [N, N]
+    d_ids = np.broadcast_to(np.arange(n, dtype=np.int32), (n, n))
+    nh = np.where(adj, d_ids, inter.astype(np.int32))
+    np.fill_diagonal(nh, np.arange(n))
+    return nh
+
+
+@dataclass
+class RoutingTables:
+    """Precomputed routing state used by the simulator and the fabric."""
+
+    graph: Graph
+    dist: np.ndarray  # [n, n] int16
+    next_hop: np.ndarray  # [n, n] int32 minimal
+    diameter: int
+
+    def path(self, s: int, d: int) -> List[int]:
+        return minimal_path(self.next_hop, s, d)
+
+
+def build_routing(g: Graph, pf: Optional[PolarFly] = None) -> RoutingTables:
+    dist = all_pairs_distances(g)
+    if pf is not None and pf.graph is g:
+        nh = polarfly_next_hop_table(pf)
+    else:
+        nh = next_hop_table(g, dist)
+    diam = int(dist.max())
+    return RoutingTables(graph=g, dist=dist, next_hop=nh, diameter=diam)
+
+
+def minimal_path(next_hop: np.ndarray, s: int, d: int) -> List[int]:
+    path = [s]
+    u = s
+    while u != d:
+        u = int(next_hop[u, d])
+        if u < 0:
+            raise ValueError(f"no route {s}->{d}")
+        path.append(u)
+        if len(path) > next_hop.shape[0]:
+            raise RuntimeError("routing loop")
+    return path
+
+
+def valiant_path(rt: RoutingTables, s: int, d: int, rng: np.random.Generator) -> List[int]:
+    """General Valiant: random intermediate r != s, d; min(s->r) + min(r->d)."""
+    n = rt.graph.n
+    while True:
+        r = int(rng.integers(n))
+        if r != s and r != d:
+            break
+    p1 = minimal_path(rt.next_hop, s, r)
+    p2 = minimal_path(rt.next_hop, r, d)
+    return p1 + p2[1:]
+
+
+def compact_valiant_candidates(rt: RoutingTables, s: int, d: int) -> np.ndarray:
+    """Compact Valiant (§VII-B): intermediates drawn from N(s).
+
+    Only valid when s and d are NOT adjacent (otherwise packets can bounce
+    back through s); callers must fall back to minimal or general Valiant for
+    adjacent pairs.  Excludes neighbors whose min path to d passes back
+    through s (cannot happen in PolarFly for non-adjacent s, d; guarded for
+    generality)."""
+    if rt.dist[s, d] == 1:
+        raise ValueError("Compact Valiant is undefined for adjacent pairs")
+    nbs = rt.graph.neighbors[s]
+    ok = rt.next_hop[nbs, d] != s
+    ok &= nbs != d  # r == d is just the minimal path
+    return nbs[ok]

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels: minplus APSP, gf_crossprod routing tables, flash attention."""

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: FlashAttention-style online-softmax GQA attention.
+
+Grid (batch, q_head, q_block, kv_block) with kv innermost: the output tile
+and the running (m, l, acc) statistics stay resident in VMEM scratch across
+the kv sweep, while K/V tiles stream HBM->VMEM.  Supports:
+
+  * grouped-query attention (kv head = q head // group) via the K/V
+    BlockSpec index maps -- no repeat/copy of KV in HBM,
+  * causal masking (fully-masked kv tiles are skipped with pl.when),
+  * logit soft-capping (gemma2),
+  * sliding-window masking (gemma2 local layers, recurrentgemma).
+
+Default tiles (bq, bk) = (128, 128): with D <= 256 the resident set is
+q (128 x 256 f32 = 128 KiB) + k,v tiles + acc -- well under VMEM, and both
+matmuls are (128 x D) x (D x 128) / (128 x 128) x (128 x D), MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(bq: int, bk: int, causal: bool, softcap: Optional[float],
+                 window: Optional[int], scale: float, nk: int):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        iq = pl.program_id(2)
+        ik = pl.program_id(3)
+
+        @pl.when(ik == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        # block-level skip: no interaction when the whole tile is masked
+        relevant = jnp.bool_(True)
+        if causal:
+            relevant &= (ik * bk) <= (iq * bq + bq - 1)
+        if window is not None:
+            relevant &= (ik * bk + bk - 1) > (iq * bq - window)
+
+        @pl.when(relevant)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, d]
+            k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+            v = v_ref[0, 0].astype(jnp.float32)  # [bk, d]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = jnp.ones((bq, bk), dtype=bool)
+            if causal:
+                mask &= kpos <= qpos
+            if window is not None:
+                mask &= kpos > qpos - window
+            s = jnp.where(mask, s, NEG_INF)
+
+            m_prev = m_scr[...]
+            l_prev = l_scr[...]
+            m_cur = jnp.max(s, axis=1)[:, None]  # [bq, 1]
+            m_new = jnp.maximum(m_prev, m_cur)
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)  # [bq, bk]
+            l_new = l_prev * alpha + p.sum(axis=1)[:, None]
+            acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
+            l_scr[...] = l_new
+
+        @pl.when(ik == nk - 1)
+        def _finalize():
+            l = l_scr[...]
+            out = acc_scr[...] / jnp.where(l > 0, l, 1.0)
+            o_ref[0, 0] = out.astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "softcap", "window", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, causal: bool = True,
+                           softcap: Optional[float] = None,
+                           window: Optional[int] = None,
+                           scale: Optional[float] = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True):
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    g = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, "seq must divide block size"
+    nq, nk = s // bq, s // bk
+    scale = scale if scale is not None else d ** -0.5
+
+    kernel = _make_kernel(bq, bk, causal, softcap, window, float(scale), nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),  # unnormalized accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

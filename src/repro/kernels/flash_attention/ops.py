@@ -1,0 +1,35 @@
+"""Public attention op with Pallas/ref backend switch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_chunked, attention_ref
+
+_CHUNK_THRESHOLD = 4096  # switch to q-block-scanned attention at this seq len
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, causal: bool = True, softcap: Optional[float] = None,
+              window: Optional[int] = None, scale: Optional[float] = None,
+              use_pallas: bool = False, bq: int = 128, bk: int = 128):
+    """GQA attention.  `use_pallas=True` runs the flash kernel (interpret
+    mode off-TPU -- correctness only).  The jnp path (what jit-compiled steps
+    use for the CPU dry-run) switches to a q-block-scanned exact variant at
+    long sequence lengths so the logits working set stays bounded."""
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, softcap=softcap,
+                                      window=window, scale=scale, bq=bq, bk=bk,
+                                      interpret=not _on_tpu())
+    if q.shape[2] >= _CHUNK_THRESHOLD:
+        return attention_chunked(q, k, v, causal=causal, softcap=softcap,
+                                 window=window, scale=scale)
+    return attention_ref(q, k, v, causal=causal, softcap=softcap,
+                         window=window, scale=scale)

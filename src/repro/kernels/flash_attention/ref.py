@@ -1,0 +1,94 @@
+"""Pure-jnp oracle for GQA attention with softcap / sliding window / causal."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, softcap: Optional[float] = None,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q: [B, Hq, S, D]; k, v: [B, Hkv, S, D]; Hq % Hkv == 0.
+
+    window = w keeps keys with  pos_q - w < pos_k <= pos_q  (sliding window
+    attention as in gemma2 local layers / recurrentgemma)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, g, axis=1)
+    vf = jnp.repeat(vf, g, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, softcap: Optional[float] = None,
+                      window: Optional[int] = None,
+                      scale: Optional[float] = None,
+                      block_q: int = 512) -> jnp.ndarray:
+    """XLA-flash: scan over query blocks so the logits working set is
+    [B, H, block_q, S] instead of [B, H, S, S].  Exact (per-block softmax over
+    the full key range); used inside compiled train/prefill steps for long
+    sequences where the Pallas kernel cannot lower (CPU dry-run) and the
+    dense reference would not fit."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    if s % block_q != 0:
+        return attention_ref(q, k, v, causal, softcap, window, scale)
+    nq = s // block_q
+    # grouped heads, no KV repeat (a repeat materializes g extra copies)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qb = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, nq, block_q, d)
+    qb = jnp.moveaxis(qb, 3, 0)  # [nq, B, Hkv, g, bq, d]
+    kpos = jnp.arange(s)
+
+    def body(_, args):
+        qi, iq = args
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qi, kf)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        qpos = iq * block_q + jnp.arange(block_q)
+        mask = jnp.ones((block_q, s), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        return None, jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+
+    # recompute the [bq, S] probabilities per chunk in the backward pass
+    # (flash-attention-style); without this, AD through the scan stacks
+    # every chunk's probabilities: O(S^2) saved activations per layer.
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, ob = jax.lax.scan(body, None, (qb, jnp.arange(nq)))
+    # ob [nq, B, Hkv, g, bq, d] -> [B, Hkv, g, nq, bq, d] -> [B, Hq, S, d]
+    out = jnp.moveaxis(ob, 0, 3).reshape(b, hq, s, d)
+    return out.astype(q.dtype)

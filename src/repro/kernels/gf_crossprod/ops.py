@@ -1,0 +1,38 @@
+"""Public op: PolarFly routing-table (intermediate-vertex) computation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import crossprod_normalized_pallas
+from .ref import crossprod_normalized_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def crossprod_normalized(s, d, q: int, use_pallas: bool = True):
+    """All-pairs left-normalized GF(p) cross products (prime q only)."""
+    s = jnp.asarray(s, jnp.int32)
+    d = jnp.asarray(d, jnp.int32)
+    if use_pallas:
+        return crossprod_normalized_pallas(s, d, q, interpret=not _on_tpu())
+    return crossprod_normalized_ref(s, d, q)
+
+
+def intermediate_table(vertices: np.ndarray, q: int,
+                       use_pallas: bool = False) -> np.ndarray:
+    """[N, N] int32 table of 2-hop intermediate vertex ids for ER_q (prime q).
+
+    Parallel (s == d) pairs come back as -1.  Device-computed counterpart of
+    PolarFly.intermediates_all_pairs()."""
+    vt = np.asarray(vertices, dtype=np.int32)
+    w = np.asarray(crossprod_normalized(vt, vt, q, use_pallas=use_pallas))
+    code = (w[..., 0].astype(np.int64) * q + w[..., 1]) * q + w[..., 2]
+    lut = -np.ones(q ** 3, dtype=np.int32)
+    vcode = (vt[:, 0].astype(np.int64) * q + vt[:, 1]) * q + vt[:, 2]
+    lut[vcode] = np.arange(len(vt), dtype=np.int32)
+    return lut[code]

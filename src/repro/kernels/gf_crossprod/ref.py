@@ -1,0 +1,44 @@
+"""Pure-jnp oracle: all-pairs GF(p) cross product + left-normalization.
+
+This is the paper's §IV-D routing computation ("two multiplies and three
+adds in F_q ... then at most another two multiplies for left-normalization")
+batched over all (source, destination) pairs.  Prime fields only (the TPU
+fast path computes mod-p arithmetic directly; prime-power fields go through
+the table-based host path in repro.core.gf).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _mod(x, q):
+    return jnp.remainder(x, q)
+
+
+def _pow_mod(a, e: int, q: int):
+    """a**e mod q by binary exponentiation (e static)."""
+    result = jnp.ones_like(a)
+    base = a
+    while e > 0:
+        if e & 1:
+            result = _mod(result * base, q)
+        base = _mod(base * base, q)
+        e >>= 1
+    return result
+
+
+def crossprod_normalized_ref(s: jnp.ndarray, d: jnp.ndarray, q: int) -> jnp.ndarray:
+    """[n,3] x [m,3] int32 -> [n,m,3] left-normalized cross products mod q.
+
+    Rows where s and d are parallel give the zero vector (callers treat
+    these as 'adjacent or identical; no 2-hop intermediate needed')."""
+    s = s.astype(jnp.int32)[:, None, :]  # [n,1,3]
+    d = d.astype(jnp.int32)[None, :, :]  # [1,m,3]
+    c0 = _mod(s[..., 1] * d[..., 2] - s[..., 2] * d[..., 1], q)
+    c1 = _mod(s[..., 2] * d[..., 0] - s[..., 0] * d[..., 2], q)
+    c2 = _mod(s[..., 0] * d[..., 1] - s[..., 1] * d[..., 0], q)
+    lead = jnp.where(c0 != 0, c0, jnp.where(c1 != 0, c1, c2))
+    inv = _pow_mod(lead, q - 2, q)  # Fermat; inv(0) = 0 -> zero vector stays zero
+    return jnp.stack([_mod(c0 * inv, q), _mod(c1 * inv, q), _mod(c2 * inv, q)],
+                     axis=-1)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the tropical (min,+) matrix product and APSP."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF = jnp.float32(3.0e38) / 4  # headroom so inf+inf does not overflow
+
+
+def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C[i, j] = min_k A[i, k] + B[k, j]; float32."""
+    return jnp.min(a[:, None, :] + b.T[None, :, :], axis=-1)
+
+
+def adjacency_to_dist0(adj: jnp.ndarray) -> jnp.ndarray:
+    """Boolean adjacency -> 1-step distance matrix (0 diag, 1 edge, INF else)."""
+    n = adj.shape[0]
+    d = jnp.where(adj, 1.0, INF).astype(jnp.float32)
+    return jnp.where(jnp.eye(n, dtype=bool), 0.0, d)
+
+
+def apsp_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs shortest paths by repeated tropical squaring (log2 n rounds)."""
+    d = adjacency_to_dist0(adj)
+    n = adj.shape[0]
+    steps = max(1, int(jnp.ceil(jnp.log2(jnp.maximum(n - 1, 2)))))
+    for _ in range(int(steps)):
+        d = minplus_ref(d, d)
+    return d

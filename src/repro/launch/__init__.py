@@ -1,0 +1,1 @@
+"""Launchers: meshes, dry-run, training and serving drivers."""

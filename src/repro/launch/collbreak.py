@@ -1,0 +1,124 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Collective breakdown for perf iteration: attribute trip-count-weighted
+wire bytes to (op kind, shape, source region) so hillclimbing targets the
+right collective.
+
+  PYTHONPATH=src python -m repro.launch.collbreak --arch X --shape Y [--top 15]
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+from .hlo import _COMP_HEADER, _DEF_ARRAY, _TRIP, _BODY, _CALLS, _shape_bytes
+
+
+def breakdown(txt: str, top: int = 15):
+    # computation -> multiplier (reuse parse_module's machinery)
+    from .hlo import parse_module, _split_computations, _OPCODE, _GROUPS
+    comps = _split_computations(txt)
+    entry = comps.pop("__entry__", [None])[0]
+    # multipliers, simplified: recompute via parse_module internals
+    import repro.launch.hlo as H
+    names = set(comps)
+    edges = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        for line in lines:
+            op = _OPCODE.search(line)
+            if not op:
+                continue
+            if op.group(1) == "while":
+                b = _BODY.search(line)
+                t = _TRIP.search(line)
+                n = float(t.group(1)) if t else 1.0
+                if b and b.group(1) in names:
+                    edges[cname].append((b.group(1), n))
+            elif op.group(1) in ("fusion", "call", "custom-call"):
+                m = _CALLS.search(line)
+                if m and m.group(1) in names:
+                    edges[cname].append((m.group(1), 1.0))
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    for _ in range(len(comps)):
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for c in comps:
+            for callee, k in edges[c]:
+                new[callee] += mult[c] * k
+        if all(abs(new[c] - mult[c]) < 1e-9 for c in comps):
+            mult = new
+            break
+        mult = new
+
+    rows = defaultdict(float)
+    counts = defaultdict(int)
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if not m:
+            continue
+        for line in lines:
+            k = re.search(r"\b(all-reduce|all-gather|reduce-scatter|"
+                          r"all-to-all|collective-permute)(?:-start)?\(", line)
+            if not k:
+                continue
+            cs = re.search(r"=\s*(?:\(\s*)?([a-z0-9]+)\[([0-9,]*)\]", line)
+            if not cs:
+                continue
+            _, size = _shape_bytes(cs.group(1), cs.group(2))
+            gm = _GROUPS.search(line)
+            g = int(gm.group(2)) if gm else 2
+            kind = k.group(1)
+            if kind == "all-reduce":
+                wire = 2.0 * size * (g - 1) / g
+            elif kind == "reduce-scatter":
+                wire = float(size) * (g - 1)
+            elif kind == "collective-permute":
+                wire = float(size)
+            else:
+                wire = size * (g - 1) / g
+            meta = re.search(r'op_name="([^"]*)"', line)
+            region = "?"
+            if meta:
+                nm = meta.group(1)
+                region = ("bwd" if "transpose(jvp" in nm else
+                          "fwd" if "jvp()" in nm else "opt/other")
+                tail = nm.split("/")[-1][:30]
+                region += ":" + tail
+            key = (kind, f"{cs.group(1)}[{cs.group(2)}]", f"g{g}", region)
+            rows[key] += m * wire
+            counts[key] += int(m)
+    out = sorted(rows.items(), key=lambda kv: -kv[1])[:top]
+    total = sum(rows.values())
+    return out, counts, total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--seq-parallel", dest="sp", default=None, choices=["on", "off"])
+    args = ap.parse_args()
+    from .dryrun import compile_cell
+    extra = {}
+    if args.microbatches:
+        extra["num_microbatches"] = args.microbatches
+    if args.sp:
+        extra["seq_parallel"] = args.sp == "on"
+    compiled, plan, _ = compile_cell(args.arch, args.shape, args.multipod,
+                                     extra or None)
+    rows, counts, total = breakdown(compiled.as_text(), args.top)
+    print(f"total wire bytes/device: {total/1e9:.2f} GB "
+          f"(collective term {total/50e9:.2f} s)")
+    for key, wire in rows:
+        kind, shape, g, region = key
+        print(f"{wire/1e9:9.2f} GB  {100*wire/total:5.1f}%  x{counts[key]:<6d}"
+              f"{kind:18s} {shape:28s} {g:5s} {region}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Trip-count-aware HLO cost extraction for the roofline analysis.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE, but a
+scan-over-layers executes it `num_layers` times, and it reports nothing
+about collectives.  This module parses the post-optimization HLO text into
+computations, propagates execution multipliers through the call graph
+(while bodies x known_trip_count, fusions/calls/conditionals x 1), and
+accumulates:
+
+  * dot FLOPs and dot memory traffic (lhs+rhs+out bytes),
+  * collective wire bytes per op kind under ring accounting:
+      all-reduce  2 S (g-1)/g   | all-gather S (g-1)/g | reduce-scatter S (g-1)
+      all-to-all  S (g-1)/g     | collective-permute S
+    (S = per-device result bytes, g = replica group size).
+
+All quantities are PER DEVICE (the module is the partitioned SPMD program).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+__all__ = ["ModuleCost", "parse_module"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_DEF_ARRAY = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE = re.compile(
+    r"\b(dot|while|fusion|call|conditional|custom-call|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_COLL_SHAPE = re.compile(r"=\s*(?:\(\s*)?([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'known_trip_count\D*(\d+)')
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT_OPERANDS = re.compile(r"\bdot\(([^)]*)\)")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> Tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class ModuleCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    # dot_bytes with attention-logits traffic removed: dots whose output (or
+    # lhs) is logits-shaped ([.., S>=seq_threshold]) only count their
+    # streaming operands -- the HBM traffic of a flash-attention kernel,
+    # where scores/probabilities live in VMEM only.
+    dot_bytes_flash: float = 0.0
+    coll_counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    coll_wire_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_result_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    # wire bytes if f32 collectives run in bf16 (the CPU backend upcasts
+    # bf16 program values to f32 before collectives; TPU keeps them bf16)
+    coll_wire_bytes_bf16: float = 0.0
+    unknown_trip_loops: int = 0
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.coll_wire_bytes.values()))
+
+    @property
+    def total_wire_bytes_bf16(self) -> float:
+        return float(self.coll_wire_bytes_bf16)
+
+    def summary(self) -> Dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "dot_bytes": self.dot_bytes,
+            "dot_bytes_flash": self.dot_bytes_flash,
+            "collective_counts": dict(self.coll_counts),
+            "collective_wire_bytes": {k: float(v) for k, v in self.coll_wire_bytes.items()},
+            "total_wire_bytes": self.total_wire_bytes,
+            "total_wire_bytes_bf16": self.total_wire_bytes_bf16,
+            "unknown_trip_loops": self.unknown_trip_loops,
+        }
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line[0].isspace():
+            m = _COMP_HEADER.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = [entry]  # marker
+    return comps
+
+
+def parse_module(text: str, default_group: int = 2,
+                 seq_threshold: int = 1024) -> ModuleCost:
+    comps = _split_computations(text)
+    entry = comps.pop("__entry__", [None])[0]
+    names = set(comps)
+
+    # call-graph edges with multipliers
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    unknown_loops = 0
+    for cname, lines in comps.items():
+        for line in lines:
+            op = _OPCODE.search(line)
+            if not op:
+                continue
+            kind = op.group(1)
+            if kind == "while":
+                body = _BODY.search(line)
+                cond = _COND.search(line)
+                trip = _TRIP.search(line)
+                n = float(trip.group(1)) if trip else 1.0
+                if not trip:
+                    unknown_loops += 1
+                if body and body.group(1) in names:
+                    edges[cname].append((body.group(1), n))
+                if cond and cond.group(1) in names:
+                    edges[cname].append((cond.group(1), n + 1))
+            elif kind in ("fusion", "call", "custom-call"):
+                m = _CALLS.search(line)
+                if m and m.group(1) in names:
+                    edges[cname].append((m.group(1), 1.0))
+            elif kind == "conditional":
+                m = _BRANCHES.search(line)
+                if m:
+                    for b in m.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in names:
+                            edges[cname].append((b, 1.0))
+
+    # propagate multipliers from entry
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None:  # fallback: every computation once
+        for c in comps:
+            mult[c] = 1.0
+    else:
+        mult[entry] = 1.0
+        # topological-ish fixpoint (call graph is a DAG in HLO)
+        for _ in range(len(comps)):
+            changed = False
+            newmult: Dict[str, float] = defaultdict(float)
+            newmult[entry] = 1.0
+            for c in comps:
+                for callee, k in edges[c]:
+                    newmult[callee] += mult[c] * k
+            for c in comps:
+                if abs(newmult[c] - mult[c]) > 1e-9:
+                    changed = True
+            mult = newmult
+            if not changed:
+                break
+
+    cost = ModuleCost(unknown_trip_loops=unknown_loops)
+    for cname, lines in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symbols: Dict[str, Tuple[str, str]] = {}
+        for line in lines:
+            d = _DEF_ARRAY.match(line)
+            if d:
+                symbols[d.group(1)] = (d.group(2), d.group(3))
+        for line in lines:
+            op = _OPCODE.search(line)
+            if not op:
+                continue
+            kind, is_start = op.group(1), op.group(2)
+            if kind == "dot":
+                d = _DEF_ARRAY.match(line)
+                opr = _DOT_OPERANDS.search(line)
+                lc = _LHS_C.search(line)
+                if not (d and opr):
+                    continue
+                out_n, out_b = _shape_bytes(d.group(2), d.group(3))
+                operands = [o.strip().lstrip("%").split(" ")[0]
+                            for o in opr.group(1).split(",")]
+                lhs = symbols.get(operands[0]) if operands else None
+                rhs = symbols.get(operands[1]) if len(operands) > 1 else None
+                k = 1
+                if lhs is not None and lc is not None and lc.group(1):
+                    dims = [int(x) for x in lhs[1].split(",")] if lhs[1] else []
+                    for ci in lc.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(dims):
+                            k *= dims[ci]
+                cost.dot_flops += m * 2.0 * out_n * k
+                lb = _shape_bytes(*lhs)[1] if lhs else 0
+                rb = _shape_bytes(*rhs)[1] if rhs else 0
+                cost.dot_bytes += m * (out_b + lb + rb)
+
+                def _logits_shaped(spec):
+                    if spec is None:
+                        return False
+                    dims = [int(x) for x in spec[1].split(",")] if spec[1] else []
+                    return len(dims) >= 2 and dims[-1] >= seq_threshold
+                out_spec = (d.group(2), d.group(3))
+                if _logits_shaped(out_spec):      # QK^T: stream Q, K only
+                    cost.dot_bytes_flash += m * (lb + rb)
+                elif _logits_shaped(lhs):          # P V: stream V, O only
+                    cost.dot_bytes_flash += m * (rb + out_b)
+                elif _logits_shaped(rhs):          # dP-style transpose dots
+                    cost.dot_bytes_flash += m * (lb + out_b)
+                else:
+                    cost.dot_bytes_flash += m * (out_b + lb + rb)
+            elif kind in ("all-reduce", "all-gather", "reduce-scatter",
+                          "all-to-all", "collective-permute"):
+                cs = _COLL_SHAPE.search(line)
+                if not cs:
+                    continue
+                _, size = _shape_bytes(cs.group(1), cs.group(2))
+                gm = _GROUPS.search(line)
+                if gm:
+                    g = max(1, int(gm.group(2)))
+                else:
+                    gb = _GROUPS_BRACE.search(line)
+                    g = (max(1, len(gb.group(1).split(",")))
+                         if gb else default_group)
+                if kind == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / g
+                elif kind == "all-gather":
+                    wire = size * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = float(size) * (g - 1)
+                elif kind == "all-to-all":
+                    wire = size * (g - 1) / g
+                else:
+                    wire = float(size)
+                cost.coll_counts[kind] += int(m)
+                cost.coll_result_bytes[kind] += m * size
+                cost.coll_wire_bytes[kind] += m * wire
+                cost.coll_wire_bytes_bf16 += m * wire * (0.5 if cs.group(1) == "f32" else 1.0)
+    return cost

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Buffer-level memory diagnosis for a dry-run cell: prints the top-N
+largest per-device HLO buffers with their producing op and source location.
+
+  PYTHONPATH=src python -m repro.launch.memdebug --arch X --shape Y [--top 25]
+"""
+
+import argparse
+import re
+
+
+def top_buffers(txt: str, top: int = 25):
+    DT = {"bf16": 2, "f32": 4, "s32": 4, "f16": 2, "pred": 1, "u32": 4,
+          "s8": 1, "u8": 1, "s64": 8}
+    rows = []
+    for line in txt.splitlines():
+        m = re.search(r'%([\w.\-]+) = ([a-z0-9]+)\[([0-9,]+)\]', line)
+        if not m:
+            continue
+        name, dt, dims = m.groups()
+        if dt not in DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        size = n * DT[dt]
+        opm = re.search(r'\]\S*\s+([a-z][\w\-]*)\(', line)
+        meta = re.search(r'op_name="([^"]*)"', line)
+        rows.append((size, f"{dt}[{dims}]", opm.group(1) if opm else "?",
+                     meta.group(1)[:100] if meta else ""))
+    rows.sort(key=lambda r: -r[0])
+    seen = set()
+    out = []
+    for size, shape, op, name in rows:
+        key = (shape, op, name)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append((size, shape, op, name))
+        if len(out) >= top:
+            break
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args()
+
+    from .dryrun import compile_cell
+    compiled, _, _ = compile_cell(
+        args.arch, args.shape, args.multipod,
+        {"num_microbatches": args.microbatches} if args.microbatches else None)
+    for size, shape, op, name in top_buffers(compiled.as_text(), args.top):
+        print(f"{size/1e9:8.2f} GB  {shape:34s} {op:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

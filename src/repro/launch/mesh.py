@@ -1,0 +1,28 @@
+"""Production meshes.  Functions only -- importing this module never touches
+jax device state (required: the dry-run sets XLA_FLAGS before first init)."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2x16x16 = 512
+    chips (pod, data, model).  The fabric maps each pod onto PF(17) racks
+    (fabric/placement.py); the pod axis models the inter-pod optical fabric."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU integration tests (requires >= data*model[*pod]
+    visible devices, e.g. via --xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,101 @@
+"""Roofline terms + report assembly (EXPERIMENTS.md §Roofline).
+
+Hardware constants (assignment): TPU v5e-like chip --
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+All inputs are PER-DEVICE quantities from the trip-count-corrected HLO
+parse (launch/hlo.py), so terms are seconds-per-step on one chip; the
+formulas are equivalent to the global forms
+  compute = HLO_FLOPs_global / (chips * peak), etc.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List
+
+__all__ = ["HW", "roofline_terms", "load_results", "format_table"]
+
+
+@dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s
+    link_bw: float = 50e9  # bytes/s per ICI link
+
+
+HW = _HW()
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, n_dev: int,
+                   model_flops: float) -> Dict:
+    compute_s = flops_per_dev / HW.peak_flops
+    memory_s = bytes_per_dev / HW.hbm_bw
+    collective_s = wire_bytes_per_dev / HW.link_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get).replace("_s", "")
+    bound = max(terms.values())
+    useful = model_flops / max(flops_per_dev * n_dev, 1.0)
+    # fraction of the roofline-optimal step time actually spent on useful
+    # model FLOPs if the dominant term were perfectly overlapped with others
+    mfu_bound = (model_flops / n_dev / HW.peak_flops) / max(bound, 1e-30)
+    return dict(terms, dominant=dominant, step_bound_s=bound,
+                useful_flops_ratio=useful, roofline_fraction=mfu_bound,
+                n_dev=n_dev)
+
+
+def load_results(results_dir: str, tag: str = "") -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def format_table(results: List[Dict]) -> str:
+    """Markdown table.  Primary terms are the TPU-deployment ones (flash
+    attention IO + bf16 collectives); raw CPU-lowered terms in parens."""
+    rows = ["| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+            " | dominant | useful | frac | fit (raw/TPU-est) |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"*skipped: sub-quadratic-only shape* | | | | | | |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAILED: {r.get('error','?')[:60]} | | | | | | |")
+            continue
+        t = r.get("roofline_flash", r["roofline"])
+        raw = r["roofline"]
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute_s']:.4g} | {t['memory_s']:.4g} ({raw['memory_s']:.3g}) "
+            f"| {t['collective_s']:.4g} ({raw['collective_s']:.3g}) "
+            f"| **{t['dominant']}** "
+            f"| {t['useful_flops_ratio']:.2f} | {t['roofline_fraction']:.2f} "
+            f"| {m.get('fits_16GB')}/{m.get('fits_16GB_tpu_estimate')} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(format_table(load_results(args.results, args.tag)))

@@ -1,0 +1,95 @@
+"""Training driver with checkpoint/restart, failure injection, straggler
+detection and elastic resume.
+
+CPU-runnable presets use reduced configs; the full configs are exercised by
+the dry-run (and would run unchanged on a real TPU mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --steps 50 \
+      --fail-at 20            # injected crash; rerun the command to resume
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import build_model
+from ..train import (AdamW, DataConfig, SyntheticPipeline, cosine_schedule,
+                     init_state, make_train_step)
+from ..train import checkpoint as ckpt
+from ..train.elastic import FailureInjector, StragglerDetector
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--data", default="markov", choices=["markov", "random", "fixed"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--slow-at", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset == "smoke":
+        cfg = cfg.scaled_down(dtype="float32")
+    model = build_model(cfg, remat="none" if args.preset == "smoke" else "full")
+    opt = AdamW(learning_rate=cosine_schedule(args.lr, 10, args.steps),
+                weight_decay=0.0)
+    step_fn = jax.jit(make_train_step(model, opt,
+                                      num_microbatches=args.microbatches,
+                                      compress=args.compress))
+    dc = DataConfig(global_batch=args.batch, seq_len=args.seq,
+                    vocab_size=cfg.vocab_size, kind=args.data, seed=args.seed,
+                    frames=cfg.encoder_frames, d_model=cfg.d_model)
+    pipe = SyntheticPipeline(dc)
+
+    ckpt_dir = os.path.join(args.ckpt_dir, cfg.name)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    latest = ckpt.latest_step(ckpt_dir)
+    if latest is not None:
+        template = jax.eval_shape(lambda: init_state(model, opt, jax.random.PRNGKey(args.seed)))
+        state = ckpt.restore(template, ckpt_dir, latest)
+        start = latest
+        print(f"[resume] restored step {latest} from {ckpt_dir}")
+    else:
+        state = init_state(model, opt, jax.random.PRNGKey(args.seed))
+        start = 0
+
+    injector = FailureInjector(fail_at_step=args.fail_at, slow_at_step=args.slow_at)
+    detector = StragglerDetector()
+    for step in range(start, args.steps):
+        detector.start()
+        batch = pipe.batch_at(step)  # deterministic skip-to-step resume
+        injector.maybe_fail(step)
+        state, metrics = step_fn(state, batch)
+        stats = detector.stop()
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"dt {stats['step_time']*1e3:.0f}ms"
+                  + (" [straggler]" if stats["straggler"] else ""))
+        if (step + 1) % args.ckpt_every == 0 or step == args.steps - 1:
+            ckpt.save_async(state, ckpt_dir, step + 1)
+    ckpt.wait_pending()
+    print(f"[done] final loss {float(metrics['loss']):.4f} "
+          f"(markov entropy floor {pipe.entropy_floor():.3f}); "
+          f"straggler report: {detector.recommendation()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: the 10 assigned architectures on a shared substrate."""
+from .api import build_model  # noqa: F401
+from .config import ModelConfig  # noqa: F401

@@ -1,0 +1,28 @@
+"""Uniform model facade: build any assigned architecture by config."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from .config import ModelConfig
+from .griffin import GriffinLM
+from .mamba import MambaLM
+from .transformer import TransformerLM
+from .whisper import WhisperModel
+
+__all__ = ["build_model"]
+
+_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "ssm": MambaLM,
+    "hybrid": GriffinLM,
+    "encdec": WhisperModel,
+}
+
+
+def build_model(cfg: ModelConfig, mesh: Any = None, use_pallas: bool = False,
+                remat: str = "full", sp: bool = False, rules: Any = None):
+    cls = _FAMILIES[cfg.family]
+    return cls(cfg=cfg, mesh=mesh, use_pallas=use_pallas, remat=remat, sp=sp,
+               rules=rules)

@@ -1,0 +1,144 @@
+"""Attention block: GQA/MQA/MHA with RoPE/M-RoPE, qk-norm, softcap, sliding
+window, optional bias, and a decode path over (optionally rolling) KV caches.
+
+Cache layouts (per layer):
+  global layers : k/v [B, Hkv, S_max, D] -- seq dim sharded over `model`
+                  when kv-heads cannot be (sequence-parallel serving).
+  local layers  : rolling buffer [B, Hkv, W, D] with slot = pos mod W, plus
+                  a [W] slot->absolute-position array; memory O(window)
+                  instead of O(seq) (what makes 500k-token decode feasible
+                  for recurrentgemma / local layers).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import attention as attention_op
+from .common import ParamDef, rms_norm
+from .config import ModelConfig
+from .rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    defs = {
+        "wq": ParamDef((d, cfg.num_heads, cfg.head_dim), ("embed", "qheads", "head_dim")),
+        "wk": ParamDef((d, cfg.num_kv_heads, cfg.head_dim), ("embed", "kvheads", "head_dim")),
+        "wv": ParamDef((d, cfg.num_kv_heads, cfg.head_dim), ("embed", "kvheads", "head_dim")),
+        "wo": ParamDef((cfg.num_heads, cfg.head_dim, d), ("qheads", "head_dim", "embed"),
+                       fan_dims=(0, 1)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((cfg.num_heads, cfg.head_dim), ("qheads", "head_dim"), "zeros")
+        defs["bk"] = ParamDef((cfg.num_kv_heads, cfg.head_dim), ("kvheads", "head_dim"), "zeros")
+        defs["bv"] = ParamDef((cfg.num_kv_heads, cfg.head_dim), ("kvheads", "head_dim"), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((cfg.head_dim,), ("head_dim",), "zeros")
+        defs["k_norm"] = ParamDef((cfg.head_dim,), ("head_dim",), "zeros")
+    return defs
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, rope: bool = True):
+    """x [B,S,d] -> q [B,Hq,S,D], k/v [B,Hkv,S,D] (rope applied)."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, positions, *, local: bool = False,
+               causal: bool = True, use_pallas: bool = False) -> jnp.ndarray:
+    """Full-sequence (training / prefill) attention."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    window = cfg.local_window if local else None
+    o = attention_op(q, k, v, causal=causal, softcap=cfg.attn_softcap,
+                     window=window, use_pallas=use_pallas)
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ----------------------------------------------------------------------------
+# decode path
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, local: bool,
+               dtype) -> Dict[str, jnp.ndarray]:
+    length = min(cfg.local_window, max_seq) if (local and cfg.local_window) else max_seq
+    shape = (batch, cfg.num_kv_heads, length, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "slot_pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def cache_logical_axes() -> Dict[str, Tuple]:
+    return {"k": ("batch", "kvheads", "kv_seq", "head_dim"),
+            "v": ("batch", "kvheads", "kv_seq", "head_dim"),
+            "slot_pos": (None,)}
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache, pos, *, local: bool = False):
+    """One-token decode.  x [B,1,d]; pos scalar int32 (same for whole batch).
+
+    Returns (out [B,1,d], new_cache)."""
+    b = x.shape[0]
+    pos_b = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.stack([pos_b] * 3, axis=0)
+    else:
+        positions = pos_b
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+
+    # rolling slot: pos mod buffer length (== pos for full-length caches)
+    length = cache["k"].shape[2]
+    slot = jax.lax.rem(pos.astype(jnp.int32), jnp.int32(length))
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, 0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"],
+                                            pos[None].astype(jnp.int32), (slot,))
+
+    # grouped-head attention without materializing repeated KV (the repeat
+    # would copy the whole cache g times in f32)
+    b2 = q.shape[0]
+    gq = cfg.num_heads // cfg.num_kv_heads
+    # keep operands in cache dtype with f32 accumulation: an explicit
+    # .astype(f32) of the cache makes XLA keep a second full f32 copy of
+    # the [layers, B, Hkv, S, D] cache stack across the layer scan
+    qf = (q * jnp.asarray(cfg.head_dim ** -0.5, q.dtype)).reshape(
+        b2, cfg.num_kv_heads, gq, cfg.head_dim)  # S == 1 squeezed into g
+    logits = jnp.einsum("bhgk,bhsk->bhgs", qf, k.astype(qf.dtype),
+                        preferred_element_type=jnp.float32)  # [B,Hkv,g,L]
+    if cfg.attn_softcap is not None:
+        logits = cfg.attn_softcap * jnp.tanh(logits / cfg.attn_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if local and cfg.local_window:
+        valid &= slot_pos > pos - cfg.local_window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgs,bhsk->bhgk", w, v.astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    o = o.reshape(b2, cfg.num_heads, 1, cfg.head_dim)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v, "slot_pos": slot_pos}

@@ -1,0 +1,286 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA
+attention in a 2:1 pattern (rec, rec, attn).
+
+RG-LRU:  r_t = sigmoid(blockdiag(W_a) x_t),  i_t = sigmoid(blockdiag(W_x) x_t)
+         a_t = exp(-c softplus(L) * r_t),    c = 8
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+Gates use block-diagonal projections (Griffin paper) -- 16 blocks here.
+Prefill runs the recurrence as an associative scan; decode carries
+(conv_state, h) per rec layer and a 2048-slot rolling window cache per attn
+layer, so 500k-token decode is O(window + width), not O(seq).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mlp as ffn
+from .common import (ParamDef, dtype_of, embed_lookup, init_params,
+                     logits_constrain, param_specs, rms_norm, sp_boundary,
+                     sp_constrain, stack_defs)
+from .config import ModelConfig
+from .rope import default_positions
+
+__all__ = ["GriffinLM"]
+
+_NBLOCKS = 16
+_C = 8.0
+
+
+def _blockdiag_apply(w, x):
+    """w [NB, c, c]; x [..., NB*c] -> [..., NB*c]."""
+    nb, c, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, c))
+    return jnp.einsum("...nc,ncd->...nd", xs, w.astype(x.dtype)).reshape(x.shape)
+
+
+def _lru_assoc(ea, eb):
+    a1, b1 = ea
+    a2, b2 = eb
+    return a1 * a2, a2 * b1 + b2
+
+
+@dataclass
+class GriffinLM:
+    cfg: ModelConfig
+    mesh: Any = None
+    use_pallas: bool = False
+    remat: str = "full"
+    sp: bool = False
+    rules: 'Any' = None
+
+    # pattern bookkeeping: (rec, rec, attn) groups + rec tail
+    @property
+    def _groups(self) -> int:
+        return self.cfg.num_layers // 3
+
+    @property
+    def _tail(self) -> int:
+        return self.cfg.num_layers - 3 * self._groups  # extra rec layers
+
+    # -- defs -------------------------------------------------------------------
+    def _rec_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d, w = cfg.d_model, cfg.lru_width
+        c = w // _NBLOCKS
+        return {
+            "ln": ParamDef((d,), ("embed",), "zeros"),
+            "w_gate": ParamDef((d, w), ("embed", "lru")),
+            "w_x": ParamDef((d, w), ("embed", "lru")),
+            "conv_w": ParamDef((4, w), (None, "lru"), scale=0.5),
+            "conv_b": ParamDef((w,), ("lru",), "zeros"),
+            "gate_a": ParamDef((_NBLOCKS, c, c), (None, "lru", None), fan_dims=(1,)),
+            "gate_x": ParamDef((_NBLOCKS, c, c), (None, "lru", None), fan_dims=(1,)),
+            "lambda_": ParamDef((w,), ("lru",), "normal", scale=1.0),
+            "w_out": ParamDef((w, d), ("lru", "embed")),
+            "mlp_ln": ParamDef((d,), ("embed",), "zeros"),
+            "mlp": ffn.mlp_defs(cfg),
+        }
+
+    def _attn_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            "ln": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "attn": attn.attn_defs(cfg),
+            "mlp_ln": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "mlp": ffn.mlp_defs(cfg),
+        }
+
+    def defs(self):
+        cfg = self.cfg
+        out = {
+            "embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed_table"), "fan_in", fan_dims=(1,)),
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "rec": stack_defs(self._rec_defs(), 2 * self._groups),
+            "att": stack_defs(self._attn_defs(), self._groups),
+        }
+        if self._tail:
+            out["tail"] = stack_defs(self._rec_defs(), self._tail)
+        return out
+
+    def init(self, key):
+        return init_params(self.defs(), key, dtype_of(self.cfg.dtype))
+
+    def param_pspecs(self, mesh, rules=None):
+        from ..parallel.sharding import DEFAULT_RULES
+        return param_specs(self.defs(), mesh, rules or self.rules or DEFAULT_RULES)
+
+    # -- RG-LRU mixer -------------------------------------------------------------
+    def _rec_mixer(self, p, h, cache=None):
+        cfg = self.cfg
+        dt_ = h.dtype
+        gate = jax.nn.gelu(h @ p["w_gate"].astype(dt_))  # [B,S,W]
+        x = h @ p["w_x"].astype(dt_)
+        k = 4
+        if cache is None:
+            xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+            conv_state = None
+        else:
+            xp = jnp.concatenate([cache["conv"].astype(dt_), x], axis=1)
+            conv_state = xp[:, -(k - 1):]
+        xc = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(dt_)
+                 for i in range(k))
+        xc = xc + p["conv_b"].astype(dt_)
+
+        r = jax.nn.sigmoid(_blockdiag_apply(p["gate_a"], xc).astype(jnp.float32))
+        i = jax.nn.sigmoid(_blockdiag_apply(p["gate_x"], xc).astype(jnp.float32))
+        log_a = -_C * jax.nn.softplus(p["lambda_"].astype(jnp.float32)) * r
+        a = jnp.exp(log_a)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        b = mult * i * xc.astype(jnp.float32)
+        if cache is None:
+            aa, bb = jax.lax.associative_scan(_lru_assoc, (a, b), axis=1)
+            hseq = bb  # h0 = 0
+            new_cache = None
+            y = hseq
+        else:
+            h1 = a[:, 0] * cache["h"] + b[:, 0]
+            y = h1[:, None]
+            new_cache = {"conv": conv_state.astype(dt_), "h": h1}
+        out = (y.astype(dt_) * gate) @ p["w_out"].astype(dt_)
+        return out, new_cache
+
+    def _rec_block(self, p, x, cache=None):
+        h = rms_norm(x, p["ln"], self.cfg.norm_eps)
+        if cache is None:
+            h = sp_boundary(h, self.mesh, self.sp, self.rules)
+        o, nc = self._rec_mixer(p, h, cache)
+        if cache is None:
+            o = sp_boundary(o, self.mesh, self.sp, self.rules)
+        x = x + o
+        h = rms_norm(x, p["mlp_ln"], self.cfg.norm_eps)
+        if cache is None:
+            h = sp_boundary(h, self.mesh, self.sp, self.rules)
+        f = ffn.mlp_apply(p["mlp"], h, self.cfg)
+        if cache is None:
+            f = sp_boundary(f, self.mesh, self.sp, self.rules)
+        return x + f, nc
+
+    def _att_block(self, p, x, positions, cache=None, pos=None):
+        cfg = self.cfg
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        if cache is None:
+            h = sp_boundary(h, self.mesh, self.sp, self.rules)
+            a = attn.attn_apply(p["attn"], h, cfg, positions, local=True,
+                                use_pallas=self.use_pallas)
+            nc = None
+        else:
+            a, nc = attn.attn_decode(p["attn"], h, cfg, cache, pos, local=True)
+        x = x + a
+        h = rms_norm(x, p["mlp_ln"], cfg.norm_eps)
+        return x + ffn.mlp_apply(p["mlp"], h, cfg), nc
+
+    # -- forward -------------------------------------------------------------------
+    def forward(self, params, tokens, positions=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = positions if positions is not None else default_positions(b, s)
+        x = embed_lookup(params["embedding"], tokens, self.mesh, self.rules)
+        if cfg.emb_scale_by_sqrt_dim:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        g = self._groups
+        rec = jax.tree.map(lambda a: a.reshape((g, 2) + a.shape[1:]), params["rec"])
+
+        def body(x, xs):
+            rp, ap = xs
+            x, _ = self._rec_block(jax.tree.map(lambda a: a[0], rp), x)
+            x, _ = self._rec_block(jax.tree.map(lambda a: a[1], rp), x)
+            x, _ = self._att_block(ap, x, positions)
+            return sp_constrain(x, self.mesh, self.sp, self.rules), None
+
+        if self.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, (rec, params["att"]))
+        for t in range(self._tail):
+            tp = jax.tree.map(lambda a: a[t], params["tail"])
+            x, _ = self._rec_block(tp, x)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return logits_constrain((x @ params["embedding"].T.astype(x.dtype))
+                                .astype(jnp.float32), self.mesh, self.rules)
+
+    # -- decode ----------------------------------------------------------------
+    def _rec_cache(self, batch, dtype):
+        cfg = self.cfg
+        return {"conv": jnp.zeros((batch, 3, cfg.lru_width), dtype),
+                "h": jnp.zeros((batch, cfg.lru_width), jnp.float32)}
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or dtype_of(cfg.dtype)
+        g = self._groups
+        rc = jax.tree.map(lambda a: jnp.broadcast_to(a, (g, 2) + a.shape).copy(),
+                          self._rec_cache(batch, dtype))
+        ac = jax.tree.map(lambda a: jnp.broadcast_to(a, (g,) + a.shape).copy(),
+                          attn.init_cache(cfg, batch, max_seq, True, dtype))
+        out = {"rec": rc, "att": ac}
+        if self._tail:
+            out["tail"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self._tail,) + a.shape).copy(),
+                self._rec_cache(batch, dtype))
+        return out
+
+    def cache_pspecs(self, mesh, batch: int, max_seq: int, rules=None):
+        from ..parallel.sharding import DEFAULT_RULES, spec_for
+        rules = rules or DEFAULT_RULES
+        cfg = self.cfg
+        g = self._groups
+        w = cfg.lru_width
+        length = min(cfg.local_window or max_seq, max_seq)
+        rc = {"conv": spec_for((g, 2, batch, 3, w),
+                               ("layers", None, "batch", None, "lru"), mesh, rules),
+              "h": spec_for((g, 2, batch, w),
+                            ("layers", None, "batch", "lru"), mesh, rules)}
+        la = attn.cache_logical_axes()
+        shapes = {"k": (g, batch, cfg.num_kv_heads, length, cfg.head_dim),
+                  "v": (g, batch, cfg.num_kv_heads, length, cfg.head_dim),
+                  "slot_pos": (g, length)}
+        ac = {k: spec_for(shapes[k], ("layers",) + la[k], mesh, rules)
+              for k in shapes}
+        out = {"rec": rc, "att": ac}
+        if self._tail:
+            out["tail"] = {"conv": spec_for((self._tail, batch, 3, w),
+                                            ("layers", "batch", None, "lru"), mesh, rules),
+                           "h": spec_for((self._tail, batch, w),
+                                         ("layers", "batch", "lru"), mesh, rules)}
+        return out
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = embed_lookup(params["embedding"], tokens, self.mesh, self.rules)
+        if cfg.emb_scale_by_sqrt_dim:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        g = self._groups
+        rec = jax.tree.map(lambda a: a.reshape((g, 2) + a.shape[1:]), params["rec"])
+
+        def body(x, xs):
+            rp, ap, rc, ac = xs
+            x, nc0 = self._rec_block(jax.tree.map(lambda a: a[0], rp), x,
+                                     jax.tree.map(lambda a: a[0], rc))
+            x, nc1 = self._rec_block(jax.tree.map(lambda a: a[1], rp), x,
+                                     jax.tree.map(lambda a: a[1], rc))
+            x, nca = self._att_block(ap, x, None, ac, pos)
+            nrc = jax.tree.map(lambda a, b: jnp.stack([a, b]), nc0, nc1)
+            return x, (nrc, nca)
+
+        x, (nrec, natt) = jax.lax.scan(
+            body, x, (rec, params["att"], cache["rec"], cache["att"]))
+        out_cache = {"rec": nrec, "att": natt}
+        if self._tail:
+            ncs = []
+            for t in range(self._tail):
+                tp = jax.tree.map(lambda a: a[t], params["tail"])
+                tc = jax.tree.map(lambda a: a[t], cache["tail"])
+                x, nc = self._rec_block(tp, x, tc)
+                ncs.append(nc)
+            out_cache["tail"] = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = logits_constrain((x @ params["embedding"].T.astype(x.dtype))
+                                  .astype(jnp.float32), self.mesh, self.rules)
+        return logits, out_cache

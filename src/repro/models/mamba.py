@@ -1,0 +1,205 @@
+"""Mamba-1 (falcon-mamba-7b): depthwise conv + selective SSM scan.
+
+Training/prefill uses a chunked associative scan over the sequence
+(parallel within chunks, state carried between chunks -- the TPU-friendly
+formulation); decode is the O(1) recurrent step on a (conv_state, ssm_state)
+cache, which is why the 500k-token decode shape runs on this family.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ParamDef, dtype_of, embed_lookup, init_params,
+                     logits_constrain, param_specs, rms_norm, sp_boundary,
+                     sp_constrain, stack_defs)
+from .config import ModelConfig
+
+__all__ = ["MambaLM", "selective_scan"]
+
+_CHUNK = 256
+
+
+def _ssm_assoc(pairs_a, pairs_b):
+    a1, b1 = pairs_a
+    a2, b2 = pairs_b
+    return a1 * a2, a2 * b1 + b2
+
+
+def selective_scan(x, dt, a, b, c, d, h0=None, chunk: int = _CHUNK):
+    """x [B,S,E], dt [B,S,E], a [E,N], b/c [B,S,N], d [E] -> (y [B,S,E], h [B,E,N]).
+
+    h_t = exp(dt A) h_{t-1} + dt * B_t x_t ;  y_t = C_t . h_t + D x_t
+    """
+    bsz, s, e = x.shape
+    n = a.shape[1]
+
+    nchunks = max(1, s // chunk)
+    assert s % nchunks == 0
+    cs = s // nchunks
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(bsz, nchunks, cs, *t.shape[2:]), 1, 0)
+
+    xc, dtc, bc, cc = to_chunks(x), to_chunks(dt), to_chunks(b), to_chunks(c)
+
+    def chunk_step(h, inputs):
+        # discretize inside the chunk: the [B, cs, E, N] tensors exist only
+        # transiently (materializing them for the full sequence is O(S*E*N)
+        # f32 -- 34 GB/device at 65k local tokens on falcon-mamba)
+        x_i, dt_i, b_i, c_i = inputs
+        dtf = dt_i.astype(jnp.float32)
+        da_i = jnp.exp(dtf[..., None] * a[None, None])  # [B, cs, E, N]
+        dbx_i = (dtf * x_i.astype(jnp.float32))[..., None] \
+            * b_i[:, :, None, :].astype(jnp.float32)
+        aa, bb = jax.lax.associative_scan(_ssm_assoc, (da_i, dbx_i), axis=1)
+        hs = aa * h[:, None] + bb  # [B, cs, E, N]
+        y_i = jnp.einsum("bsen,bsn->bse", hs, c_i.astype(jnp.float32))
+        return hs[:, -1], y_i
+
+    h0 = jnp.zeros((bsz, e, n), jnp.float32) if h0 is None else h0
+    chunk_step = jax.checkpoint(chunk_step, prevent_cse=False)
+    hT, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, s, e)
+    y = y + x.astype(jnp.float32) * d[None, None]
+    return y.astype(x.dtype), hT
+
+
+@dataclass
+class MambaLM:
+    cfg: ModelConfig
+    mesh: Any = None
+    use_pallas: bool = False
+    remat: str = "full"
+    sp: bool = False
+    rules: 'Any' = None
+
+    def _block_defs(self) -> Dict[str, ParamDef]:
+        cfg = self.cfg
+        d, e, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+        return {
+            "ln": ParamDef((d,), ("embed",), "zeros"),
+            "in_proj": ParamDef((d, 2, e), ("embed", None, "inner")),
+            "conv_w": ParamDef((cfg.ssm_conv, e), (None, "inner"), scale=0.5),
+            "conv_b": ParamDef((e,), ("inner",), "zeros"),
+            "x_proj": ParamDef((e, r + 2 * n), ("inner", None)),
+            "dt_proj": ParamDef((r, e), (None, "inner")),
+            "dt_bias": ParamDef((e,), ("inner",), "normal", scale=0.1),
+            "a_log": ParamDef((e, n), ("inner", "state"), "normal", scale=0.1),
+            "d": ParamDef((e,), ("inner",), "ones"),
+            "out_proj": ParamDef((e, d), ("inner", "embed")),
+        }
+
+    def defs(self):
+        cfg = self.cfg
+        return {
+            "embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed_table"), "fan_in", fan_dims=(1,)),
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "layers": stack_defs(self._block_defs(), cfg.num_layers),
+        }
+
+    def init(self, key):
+        return init_params(self.defs(), key, dtype_of(self.cfg.dtype))
+
+    def param_pspecs(self, mesh, rules=None):
+        from ..parallel.sharding import DEFAULT_RULES
+        return param_specs(self.defs(), mesh, rules or self.rules or DEFAULT_RULES)
+
+    # -- mixer ------------------------------------------------------------------
+    def _mixer(self, p, h, cache=None, pos=None):
+        cfg = self.cfg
+        e, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+        dt_ = h.dtype
+        xz = jnp.einsum("bsd,dce->bcse", h, p["in_proj"].astype(dt_))
+        x, z = xz[:, 0], xz[:, 1]  # [B,S,E]
+        k = cfg.ssm_conv
+        if cache is None:
+            xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+            conv_state = None
+        else:
+            xp = jnp.concatenate([cache["conv"].astype(dt_), x], axis=1)
+            conv_state = xp[:, -(k - 1):]
+        # depthwise causal conv1d
+        xc = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i].astype(dt_)
+                 for i in range(k))
+        xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))
+        proj = xc @ p["x_proj"].astype(dt_)  # [B,S,r+2n]
+        dt_raw, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+        dt = jax.nn.softplus(dt_raw @ p["dt_proj"].astype(dt_)
+                             + p["dt_bias"].astype(dt_))
+        a = -jnp.exp(p["a_log"].astype(jnp.float32))
+        if cache is None:
+            y, h_last = selective_scan(xc, dt, a, bmat, cmat,
+                                       p["d"].astype(jnp.float32))
+            new_cache = None
+        else:
+            h0 = cache["ssm"]
+            da = jnp.exp(dt.astype(jnp.float32)[..., None] * a[None, None])
+            dbx = (dt.astype(jnp.float32) * xc.astype(jnp.float32))[..., None] \
+                * bmat[:, :, None, :].astype(jnp.float32)
+            h1 = da[:, 0] * h0 + dbx[:, 0]  # S == 1
+            y = jnp.einsum("ben,bn->be", h1, cmat[:, 0].astype(jnp.float32))
+            y = (y + xc[:, 0].astype(jnp.float32) * p["d"][None])[:, None]
+            y = y.astype(dt_)
+            new_cache = {"conv": conv_state.astype(dt_), "ssm": h1}
+        out = (y.astype(dt_) * jax.nn.silu(z)) @ p["out_proj"].astype(dt_)
+        return out, new_cache
+
+    # -- forward / decode --------------------------------------------------------
+    def forward(self, params, tokens, positions=None):
+        x = embed_lookup(params["embedding"], tokens, self.mesh, self.rules)
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln"], self.cfg.norm_eps)
+            h = sp_boundary(h, self.mesh, self.sp, self.rules)
+            o, _ = self._mixer(lp, h)
+            o = sp_boundary(o, self.mesh, self.sp, self.rules)
+            return sp_constrain(x + o, self.mesh, self.sp, self.rules), None
+
+        if self.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        return logits_constrain((x @ params["embedding"].T.astype(x.dtype))
+                                .astype(jnp.float32), self.mesh, self.rules)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or dtype_of(cfg.dtype)
+        L = cfg.num_layers
+        return {
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        }
+
+    def cache_pspecs(self, mesh, batch: int, max_seq: int, rules=None):
+        from ..parallel.sharding import DEFAULT_RULES, spec_for
+        rules = rules or DEFAULT_RULES
+        cfg = self.cfg
+        L = cfg.num_layers
+        return {
+            "conv": spec_for((L, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                             ("layers", "batch", None, "inner"), mesh, rules),
+            "ssm": spec_for((L, batch, cfg.d_inner, cfg.ssm_state),
+                            ("layers", "batch", "inner", "state"), mesh, rules),
+        }
+
+    def decode_step(self, params, cache, tokens, pos):
+        x = embed_lookup(params["embedding"], tokens, self.mesh, self.rules)  # [B,1,d]
+
+        def body(x, xs):
+            lp, lc = xs
+            h = rms_norm(x, lp["ln"], self.cfg.norm_eps)
+            o, nc = self._mixer(lp, h, cache=lc, pos=pos)
+            return x + o, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        logits = logits_constrain((x @ params["embedding"].T.astype(x.dtype))
+                                  .astype(jnp.float32), self.mesh, self.rules)
+        return logits, new_cache

@@ -1,0 +1,65 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl M-RoPE."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["apply_rope", "apply_mrope", "default_positions", "mrope_positions"]
+
+
+def _rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions [..., S] -> cos/sin [..., S, head_dim/2] (float32)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x [..., S, D]; cos/sin broadcastable [..., S, D/2]. Split-half rotation."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    return jnp.arange(seq)[None, :] + jnp.zeros((batch, 1), jnp.int32) + offset
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """x [B, H, S, D], positions [B, S]."""
+    cos, sin = _rope_angles(positions, x.shape[-1], theta)  # [B, S, D/2]
+    return _rotate(x, cos[:, None], sin[:, None])
+
+
+def mrope_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    """Text-only default: all 3 sections share sequential positions [3, B, S]."""
+    p = default_positions(batch, seq, offset)
+    return jnp.stack([p, p, p], axis=0)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, ...], theta: float = 1e4):
+    """qwen2-vl multimodal RoPE.
+
+    x [B, H, S, D]; positions3 [3, B, S] (temporal, height, width ids).
+    `sections` split D/2 frequency slots among the 3 position streams
+    (e.g. (16, 24, 24) for D = 128)."""
+    assert sum(sections) == x.shape[-1] // 2 and len(sections) == 3
+    cos_parts, sin_parts = [], []
+    lo = 0
+    half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    for i, sec in enumerate(sections):
+        ang = positions3[i][..., None].astype(jnp.float32) * freq[lo:lo + sec]
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        lo += sec
+    cos = jnp.concatenate(cos_parts, axis=-1)  # [B, S, D/2]
+    sin = jnp.concatenate(sin_parts, axis=-1)
+    return _rotate(x, cos[:, None], sin[:, None])

@@ -1,0 +1,268 @@
+"""Decoder-only transformer LM covering the dense & MoE architecture pool.
+
+Features by config: GQA/MQA, QKV bias, qk-norm, RoPE / M-RoPE, logit
+softcaps, alternating local/global attention (gemma2), squared-ReLU /
+SwiGLU MLPs, MoE blocks with shared experts and a first dense layer
+(deepseek), tied embeddings, gemma-style pre+post block norms.
+
+Layers are scanned (`lax.scan`) in groups of `len(cfg.layer_pattern)` so
+heterogeneous patterns compile once per pattern position.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mlp as ffn
+from .common import (ParamDef, dtype_of, embed_lookup, init_params,
+                     logits_constrain, param_specs, rms_norm, sp_boundary,
+                     sp_constrain, stack_defs)
+from .config import ModelConfig
+from .rope import default_positions, mrope_positions
+
+__all__ = ["TransformerLM"]
+
+
+@dataclass
+class TransformerLM:
+    cfg: ModelConfig
+    mesh: Any = None  # used by MoE shard_map; None for single-device tests
+    use_pallas: bool = False
+    remat: str = "full"  # none | full (applied to the scanned block)
+    sp: bool = False  # sequence-parallel residual stream
+    rules: 'Any' = None  # AxisRules override (sharding profile)
+
+    # -- parameter tables ------------------------------------------------------
+    def _ffn_defs(self, kind: str) -> Dict[str, ParamDef]:
+        if kind == "moe":
+            return ffn.moe_defs(self.cfg)
+        if kind == "dense0":  # deepseek first dense layer
+            return ffn.mlp_defs(self.cfg, self.cfg.first_dense_d_ff)
+        return ffn.mlp_defs(self.cfg)
+
+    def _block_defs(self, ffn_kind: str) -> Dict[str, Any]:
+        d = self.cfg.d_model
+        defs = {
+            "ln1": ParamDef((d,), ("embed",), "zeros"),
+            "attn": attn.attn_defs(self.cfg),
+            "ln2": ParamDef((d,), ("embed",), "zeros"),
+            "ffn": self._ffn_defs(ffn_kind),
+        }
+        if self.cfg.attn_softcap is not None:  # gemma2 also uses post-norms
+            defs["ln1_post"] = ParamDef((d,), ("embed",), "zeros")
+            defs["ln2_post"] = ParamDef((d,), ("embed",), "zeros")
+        return defs
+
+    @property
+    def _scanned_layers(self) -> int:
+        skip = 1 if self.cfg.first_dense_d_ff else 0
+        return self.cfg.num_layers - skip
+
+    def defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        ffn_kind = "moe" if cfg.num_experts else "dense"
+        out: Dict[str, Any] = {
+            "embedding": ParamDef((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed_table"), "fan_in", fan_dims=(1,)),
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), "zeros"),
+            "layers": stack_defs(self._block_defs(ffn_kind), self._scanned_layers),
+        }
+        if cfg.first_dense_d_ff:
+            out["layer0"] = self._block_defs("dense0")
+        if not cfg.tie_embeddings:
+            out["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                      ("embed_table", "vocab"))
+        return out
+
+    def init(self, key) -> Dict[str, Any]:
+        return init_params(self.defs(), key, dtype_of(self.cfg.dtype))
+
+    def param_pspecs(self, mesh, rules=None):
+        from ..parallel.sharding import DEFAULT_RULES
+        return param_specs(self.defs(), mesh, rules or self.rules or DEFAULT_RULES)
+
+    # -- forward ---------------------------------------------------------------
+    def _embed(self, params, tokens):
+        x = embed_lookup(params["embedding"], tokens, self.mesh, self.rules)
+        if self.cfg.emb_scale_by_sqrt_dim:
+            x = x * jnp.asarray(self.cfg.d_model ** 0.5, x.dtype)
+        return x
+
+    def _unembed(self, params, x):
+        w = (params["embedding"].T if self.cfg.tie_embeddings
+             else params["lm_head"])
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        if self.cfg.final_softcap is not None:
+            logits = self.cfg.final_softcap * jnp.tanh(logits / self.cfg.final_softcap)
+        return logits_constrain(logits, self.mesh, self.rules)
+
+    def _block(self, p, x, kind: str, positions, cache=None, pos=None):
+        cfg = self.cfg
+        local = kind == "local"
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cache is None:
+            h = sp_boundary(h, self.mesh, self.sp, self.rules)
+            a = attn.attn_apply(p["attn"], h, cfg, positions, local=local,
+                                use_pallas=self.use_pallas)
+            new_cache = None
+        else:
+            a, new_cache = attn.attn_decode(p["attn"], h, cfg, cache, pos,
+                                            local=local)
+        if "ln1_post" in p:
+            a = rms_norm(a, p["ln1_post"], cfg.norm_eps)
+        if cache is None:
+            a = sp_boundary(a, self.mesh, self.sp, self.rules)
+        x = x + a
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cache is None:
+            h = sp_boundary(h, self.mesh, self.sp, self.rules)
+        if cfg.num_experts and "router" in p["ffn"]:
+            f = ffn.moe_apply(p["ffn"], h, cfg, mesh=self.mesh,
+                              dropless=cache is not None)
+        else:
+            f = ffn.mlp_apply(p["ffn"], h, cfg)
+        if "ln2_post" in p:
+            f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+        if cache is None:
+            f = sp_boundary(f, self.mesh, self.sp, self.rules)
+        return x + f, new_cache
+
+    def _positions(self, tokens, positions):
+        b, s = tokens.shape
+        if positions is not None:
+            return positions
+        if self.cfg.mrope_sections is not None:
+            return mrope_positions(b, s)
+        return default_positions(b, s)
+
+    def forward(self, params, tokens, positions=None):
+        """tokens [B, S] -> logits [B, S, V] (training / prefill)."""
+        cfg = self.cfg
+        positions = self._positions(tokens, positions)
+        x = self._embed(params, tokens)
+        if cfg.first_dense_d_ff:
+            x, _ = self._block(params["layer0"], x, "global", positions)
+        pattern = cfg.layer_pattern
+        gsize = len(pattern)
+        n = self._scanned_layers
+        assert n % gsize == 0, (n, pattern)
+        groups = n // gsize
+        lp = jax.tree.map(lambda a: a.reshape((groups, gsize) + a.shape[1:]),
+                          params["layers"])
+
+        def body(x, gp):
+            for i, kind in enumerate(pattern):
+                pi = jax.tree.map(lambda a: a[i], gp)
+                x, _ = self._block(pi, x, kind, positions)
+            x = sp_constrain(x, self.mesh, self.sp, self.rules)
+            return x, None
+
+        if self.remat == "2level":
+            # sqrt-checkpointing: save residuals only at outer-group
+            # boundaries (sqrt(L) stack entries instead of L); inner groups
+            # are recomputed from the boundary during backward.
+            import numpy as _np
+            inner = 1
+            for cand in range(int(_np.sqrt(groups)), 0, -1):
+                if groups % cand == 0:
+                    inner = cand
+                    break
+            outer = groups // inner
+            lp2 = jax.tree.map(
+                lambda a: a.reshape((outer, inner) + a.shape[1:]), lp)
+
+            inner_body = jax.checkpoint(body, prevent_cse=False)
+
+            def outer_body(x, op):
+                x, _ = jax.lax.scan(inner_body, x, op)
+                return x, None
+
+            outer_body = jax.checkpoint(outer_body, prevent_cse=False)
+            x, _ = jax.lax.scan(outer_body, x, lp2)
+        else:
+            if self.remat == "full":
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, _ = jax.lax.scan(body, x, lp)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return self._unembed(params, x)
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or dtype_of(cfg.dtype)
+        pattern = cfg.layer_pattern
+        groups = self._scanned_layers // len(pattern)
+
+        def one(local):
+            c = attn.init_cache(cfg, batch, max_seq, local, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (groups,) + a.shape).copy(), c)
+
+        cache = {f"p{i}": one(kind == "local") for i, kind in enumerate(pattern)}
+        if cfg.first_dense_d_ff:
+            cache["layer0"] = attn.init_cache(cfg, batch, max_seq, False, dtype)
+        return cache
+
+    def cache_pspecs(self, mesh, batch: int, max_seq: int, rules=None):
+        """PartitionSpecs matching init_cache structure."""
+        from ..parallel.sharding import DEFAULT_RULES, spec_for
+        rules = rules or DEFAULT_RULES
+        cfg = self.cfg
+        pattern = cfg.layer_pattern
+        groups = self._scanned_layers // len(pattern)
+        logical = attn.cache_logical_axes()
+
+        def one(local):
+            length = (min(cfg.local_window, max_seq)
+                      if (local and cfg.local_window) else max_seq)
+            shapes = {"k": (batch, cfg.num_kv_heads, length, cfg.head_dim),
+                      "v": (batch, cfg.num_kv_heads, length, cfg.head_dim),
+                      "slot_pos": (length,)}
+            return {k: spec_for((groups,) + shapes[k], ("layers",) + logical[k],
+                                mesh, rules) for k in shapes}
+
+        out = {f"p{i}": one(kind == "local") for i, kind in enumerate(pattern)}
+        if cfg.first_dense_d_ff:
+            shapes = {"k": (batch, cfg.num_kv_heads, max_seq, cfg.head_dim),
+                      "v": (batch, cfg.num_kv_heads, max_seq, cfg.head_dim),
+                      "slot_pos": (max_seq,)}
+            out["layer0"] = {k: spec_for(shapes[k], logical[k], mesh, rules)
+                             for k in shapes}
+        return out
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens [B, 1], pos scalar -> (logits [B, 1, V], new cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if cfg.first_dense_d_ff:
+            x, c0 = self._block(params["layer0"], x, "global", None,
+                                cache=cache["layer0"], pos=pos)
+        pattern = cfg.layer_pattern
+        gsize = len(pattern)
+        groups = self._scanned_layers // gsize
+        lp = jax.tree.map(lambda a: a.reshape((groups, gsize) + a.shape[1:]),
+                          params["layers"])
+
+        def body(x, xs):
+            gp, gcache = xs
+            new = {}
+            for i, kind in enumerate(pattern):
+                pi = jax.tree.map(lambda a: a[i], gp)
+                x, nc = self._block(pi, x, kind, None,
+                                    cache=gcache[f"p{i}"], pos=pos)
+                new[f"p{i}"] = nc
+            return x, new
+
+        layer_caches = {k: v for k, v in cache.items() if k.startswith("p")}
+        x, new_caches = jax.lax.scan(body, x, (lp, layer_caches))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        out_cache = dict(new_caches)
+        if cfg.first_dense_d_ff:
+            out_cache["layer0"] = c0
+        return self._unembed(params, x), out_cache

@@ -1,0 +1,3 @@
+"""Distribution: sharding rules, mesh helpers, pipeline stage option."""
+from .sharding import (AxisRules, DEFAULT_RULES, spec_for,  # noqa: F401
+                       tree_specs_to_shardings, mesh_axis_sizes, batch_axes)

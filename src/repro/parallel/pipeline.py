@@ -1,0 +1,89 @@
+"""GPipe-style pipeline parallelism over a mesh axis (optional feature).
+
+The default configuration treats the `pod` axis as data-parallel; this
+module provides the alternative: split the layer stack into `n_stages`
+contiguous stages (stage s owns the [s]-th slice of the stacked layer
+params, sharded over the pipeline axis) and stream microbatches through
+with `ppermute` between neighbors.  Bubble fraction is the usual
+(S-1)/(M+S-1).
+
+Implemented with `shard_map` so the schedule is explicit and deterministic;
+works on any axis (tested over a 2-stage `pod` axis in
+tests/test_pipeline.py, and composes with the data axis for the batch).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["gpipe"]
+
+
+def gpipe(stage_fn: Callable, stage_params, x_mb: jnp.ndarray, mesh,
+          axis: str = "pod"):
+    """Run a layer-stack pipeline over `axis`.
+
+    stage_fn(params_slice, x) -> y : applies ONE stage's layers.
+    stage_params: pytree whose leaves have leading dim n_stages (sharded
+        over `axis`).
+    x_mb: [n_microbatches, mb, ...] microbatched inputs (replicated over
+        `axis`; may be sharded over other axes).
+    Returns y_mb with the same shape as x_mb.
+    """
+    n_stages = mesh.shape[axis]
+    n_mb = x_mb.shape[0]
+    steps = n_mb + n_stages - 1
+
+    other = tuple(a for a in mesh.axis_names if a != axis)
+
+    def spec_x():
+        # microbatch dim replicated; batch dim over the remaining dp axes
+        return P(None, tuple(a for a in other if a != "model") or None)
+
+    def local(params_local, x_local):
+        # params_local leaves: [1, ...] (this stage's slice)
+        p = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        mb_shape = x_local.shape[1:]
+        out_buf = jnp.zeros_like(x_local)
+
+        def step(carry, t):
+            prev_out, out_buf = carry
+            # receive activation from the previous stage
+            recv = jax.lax.ppermute(prev_out, axis, fwd_perm)
+            # stage 0 injects microbatch t (when in range)
+            inject = jax.lax.dynamic_index_in_dim(
+                x_local, jnp.clip(t, 0, n_mb - 1), keepdims=False)
+            x_in = jnp.where(stage == 0, inject, recv)
+            y = stage_fn(p, x_in)
+            # last stage writes microbatch (t - n_stages + 1) when valid
+            out_idx = t - (n_stages - 1)
+            valid = (stage == n_stages - 1) & (out_idx >= 0)
+            out_buf = jax.lax.cond(
+                valid,
+                lambda b: jax.lax.dynamic_update_index_in_dim(
+                    b, y, jnp.maximum(out_idx, 0), 0),
+                lambda b: b, out_buf)
+            return (y, out_buf), None
+
+        init = (jnp.zeros(mb_shape, x_local.dtype), out_buf)
+        (last, out_buf), _ = jax.lax.scan(step, init,
+                                          jnp.arange(steps, dtype=jnp.int32))
+        # broadcast the final outputs from the last stage to all stages
+        out_buf = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, out_buf, 0), axis)
+        return out_buf
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(pspec, spec_x()),
+        out_specs=spec_x(),
+        check_vma=False,
+    )(stage_params, x_mb)

@@ -1,0 +1,175 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter/activation dimension carries a *logical* axis name; rules
+map logical names to mesh axes.  A dimension is sharded over a mesh axis
+only if it divides evenly, otherwise it silently falls back to replicated
+(e.g. qwen2-0.5b's 14 attention heads on a 16-way model axis).
+
+Default 2D scheme (single pod, mesh ("data", "model")):
+  * tensor parallelism over "model": heads / ff / experts / vocab
+  * ZeRO-3 / FSDP over "data": the `embed` dimension of every weight
+  * batch over "data" (and "pod" when multi-pod)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "spec_for", "tree_specs_to_shardings",
+           "mesh_axis_sizes", "batch_axes"]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def get(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+
+DEFAULT_RULES = AxisRules({
+    "batch": ("pod", "data"),
+    "embed": "data",          # ZeRO-3: weights fully sharded over dp
+    "embed_table": None,      # embedding/lm_head d-dim: replicated
+                              # (Megatron vocab-parallel; avoids a full
+                              # token all-gather in the embedding wgrad)
+    "vocab": "model",
+    "qheads": "model",
+    "kvheads": "model",
+    "ff": "model",
+    "experts": "model",
+    "inner": "model",         # mamba d_inner / rg-lru width
+    "lru": "model",
+    "seq": None,
+    "kv_seq": "model",        # decode KV cache sequence dim (SP for serving)
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+})
+
+
+FSDP_RULES = AxisRules({
+    # pure ZeRO-3 profile for models whose weights are small relative to
+    # activations: no tensor parallelism -- activations shard batch over the
+    # WHOLE mesh and every weight is fully sharded over all axes (gathered
+    # per layer).  Trades O(layers * tokens * d) activation all-reduces for
+    # O(params) weight all-gathers: a ~17x collective win for <=10B dense
+    # models on the 256-chip pod (see EXPERIMENTS.md SPerf).
+    "batch": ("pod", "data", "model"),  # batch over the WHOLE mesh
+    "embed": ("data", "model"),  # weights fully sharded over the whole mesh
+    "embed_table": None,
+    "vocab": None,
+    "qheads": None,
+    "kvheads": None,
+    "ff": "data",   # second FSDP axis for the big matrices
+    "experts": None,
+    "inner": "data",
+    "lru": "data",
+    "seq": None,
+    "kv_seq": "model",
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+})
+
+FSDP_EP_RULES = AxisRules({
+    # MoE hybrid: FSDP for attention/shared-FFN (no TP -> no per-layer
+    # activation all-reduces for the dense parts), expert parallelism kept
+    # over `model` (the only axis the shard_map EP dispatch needs).  The
+    # remaining model-axis collective is the MoE combine psum.
+    "batch": ("pod", "data"),
+    "embed": ("data", "model"),
+    "embed_table": None,
+    "vocab": None,
+    "qheads": None,
+    "kvheads": None,
+    "ff": None,
+    "experts": "model",
+    "inner": None,
+    "lru": None,
+    "seq": None,
+    "kv_seq": "model",
+    "layers": None,
+    "head_dim": None,
+    "state": None,
+})
+
+PROFILES = {"tp2d": DEFAULT_RULES, "fsdp": FSDP_RULES,
+            "fsdp_ep": FSDP_EP_RULES}
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _resolve(dim: int, logical: Optional[str], rules: AxisRules,
+             sizes: Dict[str, int]) -> MeshAxes:
+    axes = rules.get(logical)
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        axes = (axes,)
+    # keep only axes present in the mesh; require divisibility by the product
+    axes = tuple(a for a in axes if a in sizes)
+    if not axes:
+        return None
+    prod = 1
+    for a in axes:
+        prod *= sizes[a]
+    if dim % prod != 0:
+        # try progressively shorter prefixes before replicating
+        for cut in range(len(axes) - 1, 0, -1):
+            sub = axes[:cut]
+            prod = 1
+            for a in sub:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(shape: Tuple[int, ...], logical: Tuple[Optional[str], ...],
+             mesh: Mesh, rules: AxisRules = DEFAULT_RULES) -> P:
+    """PartitionSpec for a concrete shape + logical axis names."""
+    assert len(shape) == len(logical), (shape, logical)
+    sizes = mesh_axis_sizes(mesh)
+    used = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        axes = _resolve(dim, name, rules, sizes)
+        if isinstance(axes, str):
+            axes = (axes,)
+        if axes:
+            axes = tuple(a for a in axes if a not in used)
+            if axes:
+                prod = 1
+                for a in axes:
+                    prod *= sizes[a]
+                if dim % prod != 0:
+                    axes = ()
+        if axes:
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that carry the global batch (dp axes)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def tree_specs_to_shardings(tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        tree, is_leaf=lambda x: isinstance(x, P))

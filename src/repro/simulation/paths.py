@@ -1,0 +1,168 @@
+"""Candidate-path construction for the fluid simulator.
+
+Every (flow, candidate) is a fixed-length padded list of *directed link* ids.
+Candidate kinds per routing mode (paper §VII):
+
+  min      -- the single minimal path (unique in PolarFly).
+  ecmp     -- K random shortest paths (used for fat-tree "non-blocking" min).
+  valiant  -- K random intermediates r != s, d; min(s,r) + min(r,d).
+  cvaliant -- Compact Valiant: intermediates from N(s), skipping neighbors
+              whose min path to d bounces through s; empty for adjacent pairs
+              (the paper falls back to minimal there).
+  ugal     -- {min} + valiant candidates (queue-adaptive choice in solver).
+  ugal_pf  -- {min} + cvaliant candidates + 2/3 threshold gate in solver.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.routing import RoutingTables, minimal_path
+from .traffic import TrafficPattern
+
+__all__ = ["DirectedEdges", "FlowPaths", "build_directed_edges", "build_flow_paths"]
+
+
+@dataclass
+class DirectedEdges:
+    """Directed-link id space: id = offset[u] + position of v in neighbors[u]."""
+    offsets: np.ndarray  # [n+1]
+    targets: np.ndarray  # [E_dir]
+    num: int
+
+    def edge_id(self, u: int, v: int) -> int:
+        nb = self.targets[self.offsets[u]:self.offsets[u + 1]]
+        i = int(np.searchsorted(nb, v))
+        assert i < len(nb) and nb[i] == v, f"no edge {u}->{v}"
+        return int(self.offsets[u] + i)
+
+
+def build_directed_edges(g: Graph) -> DirectedEdges:
+    offsets = np.zeros(g.n + 1, dtype=np.int64)
+    for u in range(g.n):
+        offsets[u + 1] = offsets[u] + len(g.neighbors[u])
+    targets = np.concatenate([nb for nb in g.neighbors]) if g.n else np.zeros(0, np.int32)
+    return DirectedEdges(offsets, targets.astype(np.int32), int(offsets[-1]))
+
+
+@dataclass
+class FlowPaths:
+    """[F, K, L] edge ids (-1 padded), per-candidate hop counts, validity."""
+    pattern: TrafficPattern
+    edges: np.ndarray  # [F, K, L] int32, -1 pad
+    hops: np.ndarray  # [F, K] int32 (0 => invalid candidate)
+    valid: np.ndarray  # [F, K] bool
+    is_min: np.ndarray  # [F, K] bool (candidate 0 for min-containing modes)
+    first_edge: np.ndarray  # [F] int32 first link of the *min* path (UGAL gate)
+    num_links: int
+    mode: str
+
+
+def _path_edges(de: DirectedEdges, path) -> list:
+    return [de.edge_id(path[i], path[i + 1]) for i in range(len(path) - 1)]
+
+
+def _random_shortest_path(rt: RoutingTables, rng, s: int, d: int) -> list:
+    """Uniform-ish random shortest path by random next-hop descent."""
+    path = [s]
+    u = s
+    while u != d:
+        nbs = rt.graph.neighbors[u]
+        good = nbs[rt.dist[nbs, d] == rt.dist[u, d] - 1]
+        u = int(good[rng.integers(len(good))])
+        path.append(u)
+    return path
+
+
+def build_flow_paths(rt: RoutingTables, pattern: TrafficPattern, mode: str,
+                     k_candidates: int = 8, seed: int = 0) -> FlowPaths:
+    rng = np.random.default_rng(seed)
+    de = build_directed_edges(rt.graph)
+    n = rt.graph.n
+    f = pattern.num_flows
+
+    include_min = mode in ("min", "ugal", "ugal_pf")
+    alt_kind = {"min": None, "ecmp": "ecmp", "valiant": "valiant",
+                "cvaliant": "cvaliant", "ugal": "valiant", "ugal_pf": "cvaliant"}[mode]
+    k_alt = 0 if alt_kind is None else k_candidates
+    k_total = (1 if include_min or mode == "ecmp" else 0) + k_alt
+    if mode == "ecmp":
+        k_total = k_candidates
+
+    lmax = 2 * max(2, rt.diameter)
+    edges = -np.ones((f, k_total, lmax), dtype=np.int32)
+    hops = np.zeros((f, k_total), dtype=np.int32)
+    valid = np.zeros((f, k_total), dtype=bool)
+    is_min = np.zeros((f, k_total), dtype=bool)
+    first_edge = np.zeros(f, dtype=np.int32)
+
+    for i in range(f):
+        s, d = int(pattern.src[i]), int(pattern.dst[i])
+        mp = minimal_path(rt.next_hop, s, d)
+        me = _path_edges(de, mp)
+        first_edge[i] = me[0]
+        col = 0
+        if include_min:
+            edges[i, col, :len(me)] = me
+            hops[i, col] = len(me)
+            valid[i, col] = True
+            is_min[i, col] = True
+            col += 1
+        if mode == "ecmp":
+            for c in range(k_total):
+                p = _random_shortest_path(rt, rng, s, d)
+                pe = _path_edges(de, p)
+                edges[i, c, :len(pe)] = pe
+                hops[i, c] = len(pe)
+                valid[i, c] = True
+                is_min[i, c] = True
+            continue
+        if alt_kind == "valiant":
+            for _ in range(k_alt):
+                while True:
+                    r = int(rng.integers(n))
+                    if r != s and r != d:
+                        break
+                p = minimal_path(rt.next_hop, s, r) + minimal_path(rt.next_hop, r, d)[1:]
+                pe = _path_edges(de, p)
+                edges[i, col, :len(pe)] = pe
+                hops[i, col] = len(pe)
+                valid[i, col] = True
+                col += 1
+        elif alt_kind == "cvaliant":
+            if rt.dist[s, d] == 1:
+                # adjacent pair: Compact Valiant would bounce through s
+                # (paper §VII-B) -> fall back to *general* Valiant
+                for _ in range(k_alt):
+                    while True:
+                        r = int(rng.integers(n))
+                        if r != s and r != d:
+                            break
+                    p = minimal_path(rt.next_hop, s, r) + minimal_path(rt.next_hop, r, d)[1:]
+                    pe = _path_edges(de, p)
+                    edges[i, col, :len(pe)] = pe
+                    hops[i, col] = len(pe)
+                    valid[i, col] = True
+                    col += 1
+                continue
+            nbs = rt.graph.neighbors[s]
+            ok = (rt.next_hop[nbs, d] != s) & (nbs != d)
+            cands = nbs[ok]
+            sel = (cands if len(cands) <= k_alt
+                   else rng.choice(cands, size=k_alt, replace=False))
+            for r in sel:
+                r = int(r)
+                p = [s] + minimal_path(rt.next_hop, r, d)
+                pe = _path_edges(de, p)
+                edges[i, col, :len(pe)] = pe
+                hops[i, col] = len(pe)
+                valid[i, col] = True
+                col += 1
+
+    return FlowPaths(pattern=pattern, edges=edges, hops=hops, valid=valid,
+                     is_min=is_min, first_edge=first_edge, num_links=de.num,
+                     mode=mode)

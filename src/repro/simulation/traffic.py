@@ -1,0 +1,147 @@
+"""Traffic patterns of paper §VIII-A.
+
+All patterns are *router-level* (co-packaged setting: permutations map
+routers to routers; each router carries `p` endpoints whose traffic shares
+the router's paths).
+
+A pattern is a set of (source, destination) flows with per-flow demand in
+flits/cycle at unit offered load; total injection per host router = p.
+
+`hosts` restricts traffic endpoints to a node subset (e.g. leaf switches of
+an indirect fat tree); default is every node (direct networks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.routing import RoutingTables
+
+__all__ = ["TrafficPattern", "uniform", "tornado", "random_permutation",
+           "perm_khop", "make_pattern", "PATTERNS"]
+
+
+@dataclass
+class TrafficPattern:
+    name: str
+    src: np.ndarray  # [F] int32 node ids
+    dst: np.ndarray  # [F] int32 node ids
+    demand: np.ndarray  # [F] float32, flits/cycle per unit offered load
+    endpoints_per_router: int
+
+    @property
+    def num_flows(self) -> int:
+        return len(self.src)
+
+
+def _hosts(g: Graph, hosts: Optional[np.ndarray]) -> np.ndarray:
+    if hosts is None:
+        return np.arange(g.n, dtype=np.int32)
+    return np.asarray(hosts, dtype=np.int32)
+
+
+def uniform(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None,
+            max_flows: int = 120_000, seed: int = 0) -> TrafficPattern:
+    """Uniform random traffic; exact all-pairs when it fits in max_flows,
+    else a uniform sample of pairs carrying the same aggregate demand."""
+    h = _hosts(g, hosts)
+    nh = len(h)
+    if nh * (nh - 1) <= max_flows:
+        s, d = np.meshgrid(np.arange(nh), np.arange(nh), indexing="ij")
+        mask = s != d
+        src = h[s[mask]]
+        dst = h[d[mask]]
+        demand = np.full(len(src), p / (nh - 1), dtype=np.float32)
+    else:
+        rng = np.random.default_rng(seed)
+        f = max_flows
+        si = rng.integers(nh, size=f)
+        di = (si + 1 + rng.integers(nh - 1, size=f)) % nh
+        src, dst = h[si], h[di]
+        demand = np.full(f, p * nh / f, dtype=np.float32)
+    return TrafficPattern("uniform", src.astype(np.int32), dst.astype(np.int32),
+                          demand, p)
+
+
+def _perm_pattern(name: str, h: np.ndarray, perm_idx: np.ndarray, p: int) -> TrafficPattern:
+    keep = perm_idx != np.arange(len(h))
+    return TrafficPattern(name, h[keep].astype(np.int32),
+                          h[perm_idx[keep]].astype(np.int32),
+                          np.full(int(keep.sum()), float(p), dtype=np.float32), p)
+
+
+def tornado(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None) -> TrafficPattern:
+    """Host router i sends all traffic to host router i + H/2 (mod H)."""
+    h = _hosts(g, hosts)
+    nh = len(h)
+    perm = (np.arange(nh) + nh // 2) % nh
+    return _perm_pattern("tornado", h, perm, p)
+
+
+def random_permutation(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None,
+                       seed: int = 0) -> TrafficPattern:
+    h = _hosts(g, hosts)
+    rng = np.random.default_rng(seed)
+    return _perm_pattern("random_perm", h, rng.permutation(len(h)), p)
+
+
+def perm_khop(rt: RoutingTables, k: int, p: int = 16,
+              hosts: Optional[np.ndarray] = None, seed: int = 0) -> TrafficPattern:
+    """PermKHop (§VIII-A(4)): a permutation whose destinations are at distance
+    exactly k; found by bipartite matching (Kuhn) on the distance-k graph."""
+    h = _hosts(rt.graph, hosts)
+    nh = len(h)
+    rng = np.random.default_rng(seed)
+    dist = rt.dist[np.ix_(h, h)]
+    cands = [np.where(dist[i] == k)[0] for i in range(nh)]
+    match_of_dst = -np.ones(nh, dtype=np.int64)
+
+    def try_assign(i, visited):
+        for j in rng.permutation(cands[i]):
+            if not visited[j]:
+                visited[j] = True
+                if match_of_dst[j] < 0 or try_assign(int(match_of_dst[j]), visited):
+                    match_of_dst[j] = i
+                    return True
+        return False
+
+    import sys
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(10000 + 10 * nh)
+    try:
+        for i in rng.permutation(nh):
+            visited = np.zeros(nh, dtype=bool)
+            if not try_assign(int(i), visited):
+                raise RuntimeError(f"no perfect {k}-hop permutation exists")
+    finally:
+        sys.setrecursionlimit(old)
+    perm = -np.ones(nh, dtype=np.int64)
+    for j in range(nh):
+        perm[int(match_of_dst[j])] = j
+    assert (perm >= 0).all()
+    assert (dist[np.arange(nh), perm] == k).all()
+    return _perm_pattern(f"perm{k}hop", h, perm, p)
+
+
+PATTERNS = ("uniform", "tornado", "random_perm", "perm1hop", "perm2hop")
+
+
+def make_pattern(name: str, rt: RoutingTables, p: int = 16,
+                 hosts: Optional[np.ndarray] = None, seed: int = 0,
+                 max_flows: int = 120_000) -> TrafficPattern:
+    g = rt.graph
+    if name == "uniform":
+        return uniform(g, p, hosts, max_flows=max_flows, seed=seed)
+    if name == "tornado":
+        return tornado(g, p, hosts)
+    if name == "random_perm":
+        return random_permutation(g, p, hosts, seed=seed)
+    if name == "perm1hop":
+        return perm_khop(rt, 1, p, hosts, seed=seed)
+    if name == "perm2hop":
+        return perm_khop(rt, 2, p, hosts, seed=seed)
+    raise ValueError(f"unknown pattern {name!r}")

@@ -1,0 +1,6 @@
+"""Training substrate: optimizer, step factories, data, checkpointing,
+elastic scaling, gradient compression."""
+from .optimizer import AdamW, cosine_schedule  # noqa: F401
+from .train_step import init_state, make_train_step, make_serve_step  # noqa: F401
+from .losses import cross_entropy, model_loss  # noqa: F401
+from .data import DataConfig, SyntheticPipeline  # noqa: F401

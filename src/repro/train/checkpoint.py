@@ -1,0 +1,123 @@
+"""Sharded checkpoint/restart (no external deps).
+
+Layout: <dir>/step_<N>/
+  manifest.json        -- tree structure, shapes, dtypes, step
+  arrays.npz           -- flattened leaves keyed by path string
+
+Restore takes target shardings, so a checkpoint written on one mesh restores
+onto any other (elastic re-shard: device_put with the new NamedSharding).
+Writes go through a background thread (async checkpointing) with an atomic
+rename commit; `latest_step` ignores uncommitted directories.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+
+_pending: list = []
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(state, ckpt_dir: str, step: int) -> str:
+    flat, treedef = _flatten_with_paths(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in arrays.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def save_async(state, ckpt_dir: str, step: int) -> threading.Thread:
+    """Snapshot to host memory synchronously, write to disk in background."""
+    flat, _ = _flatten_with_paths(state)
+    host = {k: np.asarray(v) for k, v in flat.items()}  # device->host now
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step,
+                       "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                                for k, v in host.items()}}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    t = threading.Thread(target=write, daemon=False)
+    t.start()
+    _pending.append(t)
+    return t
+
+
+def wait_pending():
+    for t in _pending:
+        t.join()
+    _pending.clear()
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(template, ckpt_dir: str, step: int, shardings=None):
+    """Restore into the structure of `template` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: matching pytree of NamedShardings for
+    elastic re-shard; None keeps arrays on the default device."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat_t, treedef = _flatten_with_paths(template)
+    flat_s = _flatten_with_paths(shardings)[0] if shardings is not None else None
+    out = {}
+    for k, leaf in flat_t.items():
+        arr = data[k]
+        want = jnp.dtype(leaf.dtype)
+        if str(arr.dtype) != str(want):
+            arr = arr.astype(want)
+        if flat_s is not None:
+            out[k] = jax.device_put(arr, flat_s[k])
+        else:
+            out[k] = jnp.asarray(arr)
+    # rebuild in template order
+    leaves_keys = list(flat_t.keys())
+    rebuilt = jax.tree.unflatten(jax.tree.structure(template),
+                                 [out[k] for k in leaves_keys])
+    return rebuilt

@@ -1,0 +1,37 @@
+"""LM losses: cross entropy (+ z-loss) with family-aware forward dispatch."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cross_entropy", "model_loss"]
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray,
+                  z_loss: float = 0.0) -> jnp.ndarray:
+    """logits [B, S, V] float32, targets [B, S] int32 -> scalar mean nll.
+
+    The label pick is a one-hot contraction (not take_along_axis): with
+    vocab-TP-sharded logits GSPMD turns it into a local reduce + psum,
+    while a gather over the sharded vocab dim would replicate the logits."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = (lse - ll).mean()
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse).mean()
+    return nll
+
+
+def model_loss(model, params, batch: Dict[str, Any], z_loss: float = 0.0):
+    """Forward + CE for any model family (whisper consumes frames)."""
+    kwargs = {}
+    if "frames" in batch:
+        kwargs["frames"] = batch["frames"]
+    if "positions" in batch:
+        kwargs["positions"] = batch["positions"]
+    logits = model.forward(params, batch["tokens"], **kwargs)
+    return cross_entropy(logits, batch["targets"], z_loss)

@@ -1,0 +1,183 @@
+"""AdamW with sharding-friendly, dtype-configurable state (no optax dep).
+
+Optimizer moments inherit the parameter PartitionSpecs (ZeRO: state is
+sharded exactly like the weights).  For >=70B configs the moments default to
+bfloat16 (stochastic-rounding-free bf16 Adam is standard at this scale);
+master params stay in the model dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_schedule"]
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, (step + 1) / max(warmup, 1))
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: Any = 3e-4  # float or schedule(step)->lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"  # moments dtype: float32 | bfloat16
+
+    def _sd(self):
+        return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[self.state_dtype]
+
+    def init(self, params) -> Dict[str, Any]:
+        sd = self._sd()
+        zeros = lambda p: jnp.zeros(p.shape, sd)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, metrics)."""
+        count = state["count"] + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            gf = jax.tree.map(lambda g: g * scale, gf)
+        lr = (self.learning_rate(count - 1)
+              if callable(self.learning_rate) else self.learning_rate)
+        b1, b2 = self.b1, self.b2
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        sd = self._sd()
+
+        def upd(p, g, mu, nu):
+            mu32 = mu.astype(jnp.float32) * b1 + g * (1 - b1)
+            nu32 = nu.astype(jnp.float32) * b2 + g * g * (1 - b2)
+            step = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * step
+            return newp.astype(p.dtype), mu32.astype(sd), nu32.astype(sd)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(gf)
+        flat_mu = jax.tree.leaves(state["mu"])
+        flat_nu = jax.tree.leaves(state["nu"])
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree.unflatten(tdef, [o[2] for o in out])
+        new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+        return new_p, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+
+    def state_pspecs(self, param_pspecs, params_template=None):
+        """Moments shard exactly like their parameters."""
+        from jax.sharding import PartitionSpec as P
+        return {"mu": param_pspecs, "nu": param_pspecs, "count": P()}
+
+
+@dataclass(frozen=True)
+class Adafactor:
+    """Factored second-moment optimizer (Shazeer & Stern 2018) -- the
+    memory-frugal choice for the >=100B configs (PaLM-style: no first
+    moment, row/col-factored v, update clipped by RMS).  State is ~2/n of
+    Adam's."""
+
+    learning_rate: Any = 1e-2
+    decay: float = 0.8  # beta2 annealed as 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+
+    def _factored(self, shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= self.min_dim_size_to_factor
+                and shape[-2] >= self.min_dim_size_to_factor)
+
+    def init(self, params) -> Dict[str, Any]:
+        def vr(p):
+            if self._factored(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        def vc(p):
+            if self._factored(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return {"vr": jax.tree.map(vr, params),
+                "vc": jax.tree.map(vc, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta2 = 1.0 - c ** (-self.decay)
+        lr = (self.learning_rate(count - 1)
+              if callable(self.learning_rate) else self.learning_rate)
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+
+        def upd(p, g, vr, vc):
+            g2 = g * g + self.eps
+            if self._factored(p.shape):
+                new_vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                new_vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                denom = new_vr.mean(axis=-1, keepdims=True)
+                r = (new_vr / jnp.maximum(denom, self.eps))[..., None]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * new_vc[..., None, :],
+                                                  self.eps))
+            else:
+                new_vc = beta2 * vc + (1 - beta2) * g2
+                new_vr = vr
+                u = g * jax.lax.rsqrt(jnp.maximum(new_vc, self.eps))
+            rms = jnp.sqrt(jnp.mean(u * u) + self.eps)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            newp = (p.astype(jnp.float32) - lr * u
+                    - lr * self.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_vr, new_vc
+
+        flat_p, tdef = jax.tree.flatten(params)
+        out = [upd(p, g, vr, vc) for p, g, vr, vc in zip(
+            flat_p, jax.tree.leaves(gf), jax.tree.leaves(state["vr"]),
+            jax.tree.leaves(state["vc"]))]
+        return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+                {"vr": jax.tree.unflatten(tdef, [o[1] for o in out]),
+                 "vc": jax.tree.unflatten(tdef, [o[2] for o in out]),
+                 "count": count},
+                {"grad_norm": gnorm, "lr": jnp.asarray(lr)})
+
+    def state_pspecs(self, param_pspecs, params_template=None):
+        """Needs the params template (arrays or ShapeDtypeStructs) to know
+        which leaves are factored."""
+        from jax.sharding import PartitionSpec as P
+        assert params_template is not None, "Adafactor specs need param shapes"
+
+        def vr_spec(spec, p):
+            if self._factored(p.shape):
+                return P(*spec[:-1])
+            return P()  # (1,) scalar-ish
+
+        def vc_spec(spec, p):
+            if self._factored(p.shape):
+                return P(*(tuple(spec[:-2]) + tuple(spec[-1:])))
+            return spec  # same shape as the param
+
+        is_spec = lambda x: isinstance(x, P)
+        vr = jax.tree.map(vr_spec, param_pspecs, params_template, is_leaf=is_spec)
+        vc = jax.tree.map(vc_spec, param_pspecs, params_template, is_leaf=is_spec)
+        return {"vr": vr, "vc": vc, "count": P()}

@@ -1,0 +1,111 @@
+"""Train step factory: microbatched grad accumulation, clipping, AdamW,
+optional int8 gradient compression with error feedback.
+
+The returned step is a pure function (state, batch) -> (state, metrics)
+meant to be `jax.jit`-ed with explicit in/out shardings by the launcher.
+State is a plain pytree (dict) so the checkpointer can serialize it
+structurally.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .compress import compress_decompress
+from .losses import model_loss
+from .optimizer import AdamW
+
+__all__ = ["init_state", "make_train_step"]
+
+
+def init_state(model, opt: AdamW, key) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _split_microbatches(batch, n: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, opt, num_microbatches: int = 1,
+                    z_loss: float = 0.0,
+                    accum_dtype: str = "float32",
+                    param_specs=None, mesh=None,
+                    compress: Optional[str] = None) -> Callable:
+    """compress: None | 'int8' (error-feedback quantized gradients).
+    accum_dtype: gradient-accumulation buffer dtype ('bfloat16' halves the
+    accumulation memory for the >=100B configs).
+    param_specs/mesh: when given, the gradient tree (and its accumulation
+    carry) is sharding-constrained to the parameter specs -- without this,
+    GSPMD may settle the scan carry on a replicated layout (observed: a
+    fully-replicated f32 lm_head gradient = 18.9 GB/device on the 340B
+    config)."""
+    adt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[accum_dtype]
+
+    if param_specs is not None and mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), param_specs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+        def constrain(grads):
+            return jax.tree.map(jax.lax.with_sharding_constraint, grads, shardings)
+    else:
+        def constrain(grads):
+            return grads
+
+    def loss_fn(params, mb):
+        return model_loss(model, params, mb, z_loss)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = constrain(grads)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+            gzero = constrain(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params))
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = constrain(g)
+                acc_l, acc_g = acc
+                acc_g = constrain(jax.tree.map(
+                    lambda a, b: a + b.astype(adt), acc_g, g))
+                return (acc_l + l, acc_g), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), gzero), mbs)
+            loss = loss / num_microbatches
+            grads = jax.tree.map(lambda g: (g / num_microbatches), grads)
+
+        new_ef = None
+        if compress == "int8":
+            grads, new_ef = compress_decompress(grads, state.get("ef"))
+        new_params, new_opt, metrics = opt.update(grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_ef is not None:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model) -> Callable:
+    """(params, cache, tokens, pos) -> (logits, cache): one decode step."""
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,4 @@
+import os
+# Tests run on the single real CPU device; only the dry-run subprocess
+# (test_dryrun.py) uses placeholder devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

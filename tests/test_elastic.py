@@ -1,0 +1,69 @@
+"""Elastic scaling: checkpoint on one mesh, restore+reshard on another."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r'''
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import get_config
+from repro.models import build_model
+from repro.parallel.sharding import tree_specs_to_shardings
+from repro.train import AdamW, init_state, make_train_step
+from repro.train import checkpoint as ckpt
+from repro.train.elastic import reshard_state
+from repro.train.data import DataConfig, SyntheticPipeline
+from jax.sharding import PartitionSpec as P
+
+cfg = get_config("qwen3-4b").scaled_down(dtype="float32", num_layers=2)
+mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2,
+                       devices=jax.devices()[:4])
+
+def make(mesh):
+    model = build_model(cfg, mesh=mesh, remat="none")
+    opt = AdamW(learning_rate=1e-3, weight_decay=0.0)
+    pspecs = model.param_pspecs(mesh)
+    sspecs = {"params": pspecs, "opt": opt.state_pspecs(pspecs), "step": P()}
+    return model, opt, sspecs
+
+model_a, opt, sspecs_a = make(mesh_a)
+state = init_state(model_a, opt, jax.random.PRNGKey(0))
+state = reshard_state(state, sspecs_a, mesh_a)  # place on mesh A
+pipe = SyntheticPipeline(DataConfig(global_batch=8, seq_len=16, vocab_size=cfg.vocab_size, kind="markov"))
+step_a = jax.jit(make_train_step(model_a, opt))
+with mesh_a:
+    for i in range(3):
+        state, m = step_a(state, pipe.batch_at(i))
+loss_a = float(m["loss"])
+
+with tempfile.TemporaryDirectory() as d:
+    ckpt.save(state, d, 3)
+    # "cluster shrinks": restore onto the smaller mesh B with resharding
+    model_b, opt_b, sspecs_b = make(mesh_b)
+    tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    sh_b = tree_specs_to_shardings(sspecs_b, mesh_b)
+    state_b = ckpt.restore(tmpl, d, 3, shardings=sh_b)
+    step_b = jax.jit(make_train_step(model_b, opt_b))
+    with mesh_b:
+        state_b, mb = step_b(state_b, pipe.batch_at(3))
+    # continue on mesh A from the same checkpoint; losses must agree
+    state_a2 = ckpt.restore(tmpl, d, 3)
+    with mesh_a:
+        state_a2, ma = step_a(state_a2, pipe.batch_at(3))
+    assert abs(float(mb["loss"]) - float(ma["loss"])) < 1e-4, (float(mb["loss"]), float(ma["loss"]))
+print("ELASTIC_OK", loss_a)
+'''
+
+
+def test_elastic_reshard_across_meshes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    assert "ELASTIC_OK" in r.stdout

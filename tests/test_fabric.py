@@ -1,0 +1,53 @@
+"""PolarFly as training fabric: placement + collective cost models."""
+import numpy as np
+import pytest
+
+from repro.fabric import (all_to_all, best_allreduce, place_pod,
+                          polar2phase_allreduce, rhd_allreduce, ring_allreduce)
+
+
+@pytest.fixture(scope="module")
+def pod():
+    return place_pod(16, 16, 17)
+
+
+def test_placement_bijective_with_spares(pod):
+    nodes = pod.node_of.flatten()
+    assert len(set(nodes.tolist())) == 256
+    assert len(pod.spares) == 307 - 256
+    # model axis lives inside one rack
+    for d in range(16):
+        cids = set(int(pod.layout.cluster_of[n]) for n in pod.node_of[d])
+        assert len(cids) == 1
+
+
+def test_ring_collectives_contention_free(pod):
+    """The rack-aligned placement yields contention-free rings (L=1) on both
+    mesh axes -- the fabric-level payoff of Algorithm 1."""
+    for axis in ("model", "data"):
+        c = ring_allreduce(pod, axis, 1e9, index=3)
+        assert c.max_link_load == 1.0
+        # time ~ 2(n-1)/n * B / link_bw
+        assert abs(c.seconds - 2 * 15 / 16 * 1e9 / 50e9) < 1e-3
+
+
+def test_rhd_within_2x_ring(pod):
+    r = ring_allreduce(pod, "model", 1e8)
+    h = rhd_allreduce(pod, "model", 1e8)
+    assert h.seconds < 2.5 * r.seconds
+    assert best_allreduce(pod, "model", 1e8).seconds <= min(r.seconds, h.seconds)
+
+
+def test_all_to_all_diameter2(pod):
+    c = all_to_all(pod, "model", 1e8)
+    assert c.max_link_load <= 2.0  # every round <= 2 hops on ER_q
+
+
+def test_failure_remap(pod):
+    p2 = pod.remap_failed(5, 7)
+    nodes = p2.node_of.flatten()
+    assert len(set(nodes.tolist())) == 256
+    assert len(p2.spares) == len(pod.spares) - 1
+    # remapped node still <= 2 hops from everything (diameter-2 fabric)
+    nd = p2.node_of[5, 7]
+    assert int(p2.routing.dist[nd].max()) <= 2

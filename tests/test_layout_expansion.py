@@ -1,0 +1,68 @@
+"""Algorithm 1 layout + §VI expansion."""
+from math import comb
+
+import numpy as np
+import pytest
+
+from repro.core.expansion import expand
+from repro.core.layout import build_layout
+from repro.core.metrics import diameter_and_aspl, triangles_by_cluster
+from repro.core.polarfly import build_polarfly
+
+
+@pytest.mark.parametrize("q", [5, 7, 11])
+def test_layout_partition_and_links(q):
+    pf = build_polarfly(q)
+    lay = build_layout(pf)
+    assert lay.num_clusters == q + 1
+    assert (np.bincount(lay.cluster_of) == [q + 1] + [q] * q).all()
+    m = lay.inter_cluster_edge_counts()
+    # Prop V.3.2: q+1 links between each non-quadric rack and the quadric rack
+    assert (m[0, 1:] == q + 1).all()
+    # Prop V.4.2: q-2 links between every pair of non-quadric racks
+    off = m[1:, 1:][~np.eye(q, dtype=bool)]
+    assert (off == q - 2).all()
+    # intra-rack: fan of (q-1)/2 triangles = 3(q-1)/2 edges; C_0 empty
+    assert m[0, 0] == 0
+    assert (np.diag(m)[1:] == 3 * (q - 1) // 2).all()
+
+
+@pytest.mark.parametrize("q", [5, 7])
+def test_block_design_theorem(q):
+    """Thm V.7: every non-quadric cluster triplet joined by exactly 1 triangle;
+    Prop V.6: no triangle spans exactly 2 clusters."""
+    pf = build_polarfly(q)
+    lay = build_layout(pf)
+    cen = triangles_by_cluster(pf.graph, lay.cluster_of)
+    assert cen["mixed"] == 0
+    assert cen["intra"] == comb(q, 2)
+    assert cen["inter3"] == comb(q, 3)
+
+
+@pytest.mark.parametrize("q", [7, 11])
+def test_quadric_expansion(q):
+    pf = build_polarfly(q)
+    lay = build_layout(pf)
+    base_deg = pf.graph.degrees.copy()
+    for n in (1, 2):
+        st = expand(lay, n, "quadric")
+        diam, aspl = diameter_and_aspl(st.graph)
+        assert st.graph.n == pf.n + n * (q + 1)
+        assert diam == 2 and aspl < 2
+        # V1 degree grows by 2 per replication, quadrics by n (clique)
+        v1 = pf.v1
+        assert (st.graph.degrees[v1] == base_deg[v1] + 2 * n).all()
+
+
+@pytest.mark.parametrize("q", [7, 11])
+def test_nonquadric_expansion(q):
+    pf = build_polarfly(q)
+    lay = build_layout(pf)
+    for n in (1, 3):
+        st = expand(lay, n, "nonquadric")
+        diam, aspl = diameter_and_aspl(st.graph)
+        assert st.graph.n == pf.n + n * q
+        assert diam == 3  # paper Table IV
+        assert aspl < 2
+        assert st.graph.max_degree == (q + 1) + (n + 1)  # paper: +n+1
+    st.graph.validate()

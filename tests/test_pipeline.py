@@ -1,0 +1,56 @@
+"""GPipe pipeline over a mesh axis == sequential layer application."""
+import subprocess
+import sys
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.parallel.pipeline import gpipe
+
+mesh = jax.make_mesh((4, 2), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+L, D = 8, 16
+n_stages = 4
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (L, D, D)) * 0.3
+
+def layer(wi, x):
+    return jnp.tanh(x @ wi)
+
+def stage_fn(p, x):  # p: [L/S, D, D]
+    def body(x, wi):
+        return layer(wi, x), None
+    x, _ = jax.lax.scan(body, x, p)
+    return x
+
+# reference: sequential
+x = jax.random.normal(jax.random.PRNGKey(1), (6, 4, D))  # [n_mb, mb, D]
+ref = x
+def allbody(x, wi):
+    return layer(wi, x), None
+ref, _ = jax.lax.scan(allbody, x.reshape(24, D), w)
+ref = ref.reshape(6, 4, D)
+
+stage_params = w.reshape(n_stages, L // n_stages, D, D)
+with mesh:
+    out = jax.jit(lambda p, x: gpipe(stage_fn, p, x, mesh, axis="pod"))(
+        stage_params, x)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+print("PIPELINE_OK")
+'''
+
+
+def test_gpipe_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "PIPELINE_OK" in r.stdout

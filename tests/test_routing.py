@@ -1,0 +1,45 @@
+"""§IV-D / §VII routing."""
+import numpy as np
+import pytest
+
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import (build_routing, compact_valiant_candidates,
+                                minimal_path, next_hop_table,
+                                polarfly_next_hop_table, valiant_path)
+
+
+@pytest.mark.parametrize("q", [5, 7, 9])
+def test_algebraic_next_hop_matches_bfs(q):
+    pf = build_polarfly(q)
+    rt = build_routing(pf.graph, pf)
+    nh_bfs = next_hop_table(pf.graph, rt.dist)
+    # both tables must yield shortest paths (unique in ER_q for s != d)
+    n = pf.n
+    alg = polarfly_next_hop_table(pf)
+    for s in range(0, n, 3):
+        for d in range(0, n, 5):
+            if s == d:
+                continue
+            p = minimal_path(alg, s, d)
+            assert len(p) - 1 == rt.dist[s, d]
+            p2 = minimal_path(nh_bfs, s, d)
+            assert len(p2) - 1 == rt.dist[s, d]
+
+
+def test_valiant_and_compact_valiant_lengths():
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    rng = np.random.default_rng(0)
+    for s in range(0, pf.n, 6):
+        for d in range(0, pf.n, 7):
+            if s == d:
+                continue
+            assert len(valiant_path(rt, s, d, rng)) - 1 <= 4
+            if rt.dist[s, d] == 2:
+                cands = compact_valiant_candidates(rt, s, d)
+                assert len(cands) > 0
+                for r in cands:
+                    # 1 hop to neighbor + <=2 hops to destination
+                    assert 1 + rt.dist[int(r), d] <= 3
+                    # no bounce-back through s
+                    assert rt.next_hop[int(r), d] != s

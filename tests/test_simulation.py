@@ -1,0 +1,64 @@
+"""§VIII fluid-simulator claims (scaled to q=7/13 for CPU speed)."""
+import numpy as np
+import pytest
+
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import (build_flow_paths, evaluate_load, make_pattern,
+                              saturation_throughput)
+
+
+@pytest.fixture(scope="module")
+def pf13():
+    pf = build_polarfly(13)
+    return pf, build_routing(pf.graph, pf)
+
+
+def test_uniform_min_near_full(pf13):
+    pf, rt = pf13
+    pat = make_pattern("uniform", rt, p=7)
+    fp = build_flow_paths(rt, pat, "min")
+    assert saturation_throughput(fp, tol=0.02) > 0.85
+
+
+def test_adversarial_min_collapses(pf13):
+    """Fig. 9: min-path permutation saturates near 1/p."""
+    pf, rt = pf13
+    p = 7
+    pat = make_pattern("random_perm", rt, p=p, seed=0)
+    fp = build_flow_paths(rt, pat, "min")
+    sat = saturation_throughput(fp, tol=0.01)
+    assert sat < 1.8 / p
+
+
+@pytest.mark.parametrize("pattern", ["tornado", "random_perm"])
+def test_adaptive_beats_min(pf13, pattern):
+    """Fig. 8: UGAL sustains several x the min-path adversarial throughput."""
+    pf, rt = pf13
+    pat = make_pattern(pattern, rt, p=7, seed=0)
+    sat_min = saturation_throughput(build_flow_paths(rt, pat, "min"), tol=0.02)
+    sat_ugal = saturation_throughput(
+        build_flow_paths(rt, pat, "ugal", k_candidates=10), tol=0.02)
+    assert sat_ugal > 3.5 * sat_min
+
+
+def test_ugal_pf_low_latency_on_uniform(pf13):
+    """§VIII-B: UGAL_PF ~ min-path behavior under uniform traffic."""
+    pf, rt = pf13
+    pat = make_pattern("uniform", rt, p=7)
+    fp_min = build_flow_paths(rt, pat, "min")
+    fp_pf = build_flow_paths(rt, pat, "ugal_pf", k_candidates=8)
+    sat_pf = saturation_throughput(fp_pf, tol=0.02)
+    assert sat_pf > 0.9
+    r_min = evaluate_load(fp_min, 0.5)
+    r_pf = evaluate_load(fp_pf, 0.5)
+    assert abs(r_pf.mean_hops - r_min.mean_hops) < 0.1
+
+
+def test_perm_khop_patterns():
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    for k in (1, 2):
+        pat = make_pattern(f"perm{k}hop", rt, p=4, seed=1)
+        d = rt.dist[pat.src, pat.dst]
+        assert (d == k).all()
