@@ -16,7 +16,9 @@ def run():
             # the adaptive mode (memory: F x K x L edge ids)
             mf = 1_200_000 if mode == "min" else 150_000
             pat = make_pattern("uniform", rt, p=p, seed=0, max_flows=mf)
-            fp = build_flow_paths(rt, pat, mode, k_candidates=8, seed=0)
+            fp, pus = timed(lambda: build_flow_paths(
+                rt, pat, mode, k_candidates=8, seed=0))
+            emit(f"fig10.pf{q}.{mode}.paths", pus, f"F={pat.num_flows}")
             sat, us = timed(lambda: saturation_throughput(fp, tol=0.02))
             emit(f"fig10.pf{q}.{mode}", us, f"N={pf.n};sat={sat:.3f}")
 

@@ -14,7 +14,9 @@ def run():
     lay = build_layout(pf)
     base_rt = build_routing(pf.graph, pf)
     base_pat = make_pattern("uniform", base_rt, p=(q + 1) // 2, seed=0)
-    fp = build_flow_paths(base_rt, base_pat, "ugal_pf", k_candidates=8, seed=0)
+    fp, pus = timed(lambda: build_flow_paths(base_rt, base_pat, "ugal_pf",
+                                             k_candidates=8, seed=0))
+    emit("fig11.base.pf13.paths", pus, f"F={base_pat.num_flows}")
     base_sat = saturation_throughput(fp, tol=0.02)
     emit("fig11.base.pf13", 0.0, f"N={pf.n};sat={base_sat:.3f}")
     for method in ("quadric", "nonquadric"):

@@ -30,7 +30,10 @@ def run():
             pat = make_pattern(pattern, rt, p=p, hosts=hosts, seed=0)
             modes = ["ecmp"] if name == "FT" else ["min", "ugal", "ugal_pf"]
             for mode in modes:
-                fp = build_flow_paths(rt, pat, mode, k_candidates=10, seed=0)
+                fp, pus = timed(lambda: build_flow_paths(
+                    rt, pat, mode, k_candidates=10, seed=0))
+                emit(f"fig8.{name}.{pattern}.{mode}.paths", pus,
+                     f"F={pat.num_flows}")
                 sat, us = timed(lambda: saturation_throughput(fp, tol=0.01))
                 emit(f"fig8.{name}.{pattern}.{mode}", us, f"sat={sat:.3f}")
 

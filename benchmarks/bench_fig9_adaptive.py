@@ -13,7 +13,9 @@ def run():
     for pattern in ("perm1hop", "perm2hop", "tornado", "random_perm"):
         pat = make_pattern(pattern, rt, p=7, seed=0)
         for mode in ("min", "ugal", "ugal_pf"):
-            fp = build_flow_paths(rt, pat, mode, k_candidates=10, seed=0)
+            fp, pus = timed(lambda: build_flow_paths(
+                rt, pat, mode, k_candidates=10, seed=0))
+            emit(f"fig9.{pattern}.{mode}.paths", pus, f"F={pat.num_flows}")
             sat, us = timed(lambda: saturation_throughput(fp, tol=0.01))
             lat = evaluate_load(fp, 0.9 * max(sat, 0.02)).mean_latency
             emit(f"fig9.{pattern}.{mode}", us,

@@ -1,0 +1,34 @@
+"""Vectorized vs scalar-reference flow-path construction (all six routing
+modes) on PF(13) uniform -- the acceptance benchmark for the batched engine.
+Outputs per-mode build time for both engines and the speedup factor."""
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import (build_flow_paths, build_flow_paths_reference,
+                              make_pattern)
+
+from .common import emit, timed
+
+MODES = ("min", "ecmp", "valiant", "cvaliant", "ugal", "ugal_pf")
+
+
+def run():
+    pf = build_polarfly(13)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("uniform", rt, p=7, seed=0)
+    t_vec_total = t_ref_total = 0.0
+    for mode in MODES:
+        _, us_vec = timed(lambda: build_flow_paths(
+            rt, pat, mode, k_candidates=8, seed=0))
+        _, us_ref = timed(lambda: build_flow_paths_reference(
+            rt, pat, mode, k_candidates=8, seed=0))
+        t_vec_total += us_vec
+        t_ref_total += us_ref
+        emit(f"paths.pf13.{mode}.vectorized", us_vec,
+             f"F={pat.num_flows};speedup={us_ref / us_vec:.1f}x")
+        emit(f"paths.pf13.{mode}.reference", us_ref, f"F={pat.num_flows}")
+    emit("paths.pf13.total.vectorized", t_vec_total,
+         f"speedup={t_ref_total / t_vec_total:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

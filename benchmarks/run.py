@@ -9,6 +9,7 @@ BENCHES = [
     "bench_fig2_moore",
     "bench_table2_triangles",
     "bench_table6_diversity",
+    "bench_paths_engine",
     "bench_fig8_saturation",
     "bench_fig9_adaptive",
     "bench_fig10_sizes",

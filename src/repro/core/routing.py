@@ -9,6 +9,11 @@
 * UGAL / UGAL_PF (§VII-C): per-packet min-vs-valiant decision from local
   queue occupancy; UGAL_PF uses Compact Valiant + a 2/3 adaptation threshold.
   (The queue-driven decision itself lives in repro.simulation.)
+
+Batched API: `minimal_paths(next_hop, src, dst, diameter)` extracts [F, D+1]
+node sequences for F flows at once via `diameter` next-hop gathers (at most 2
+for diameter-2 graphs like ER_q); `RoutingTables.paths` is the bound
+convenience.  The scalar `minimal_path` remains for one-off queries.
 """
 
 from __future__ import annotations
@@ -29,6 +34,7 @@ __all__ = [
     "RoutingTables",
     "build_routing",
     "minimal_path",
+    "minimal_paths",
     "valiant_path",
     "compact_valiant_candidates",
 ]
@@ -125,6 +131,11 @@ class RoutingTables:
     def path(self, s: int, d: int) -> List[int]:
         return minimal_path(self.next_hop, s, d)
 
+    def paths(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Batched minimal paths: [F, diameter + 1] node ids (see
+        `minimal_paths`)."""
+        return minimal_paths(self.next_hop, src, dst, self.diameter)
+
 
 def build_routing(g: Graph, pf: Optional[PolarFly] = None) -> RoutingTables:
     dist = all_pairs_distances(g)
@@ -134,6 +145,39 @@ def build_routing(g: Graph, pf: Optional[PolarFly] = None) -> RoutingTables:
         nh = next_hop_table(g, dist)
     diam = int(dist.max())
     return RoutingTables(graph=g, dist=dist, next_hop=nh, diameter=diam)
+
+
+def minimal_paths(next_hop: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                  diameter: int) -> np.ndarray:
+    """Batched minimal-path extraction via next-hop-table gathers.
+
+    Returns [F, diameter + 1] int32 node sequences.  Row i starts at src[i]
+    and, after dist(src[i], dst[i]) hops, reaches dst[i]; `next_hop[d, d] = d`
+    absorbs, so the remaining columns repeat dst[i] (callers recover hop
+    validity as `nodes[:, h] != nodes[:, h + 1]`).  Raises ValueError on any
+    unreachable pair.  The whole walk is `diameter` vectorized gathers -- no
+    per-flow Python loop.
+    """
+    src = np.asarray(src, dtype=np.int64).ravel()
+    dst = np.asarray(dst, dtype=np.int64).ravel()
+    if src.shape != dst.shape:
+        raise ValueError("src/dst shape mismatch")
+    f = src.shape[0]
+    nodes = np.empty((f, diameter + 1), dtype=np.int32)
+    nodes[:, 0] = src
+    cur = src
+    for h in range(diameter):
+        nxt = next_hop[cur, dst].astype(np.int64)
+        if (nxt < 0).any():
+            i = int(np.flatnonzero(nxt < 0)[0])
+            raise ValueError(f"no route {int(src[i])}->{int(dst[i])}")
+        nodes[:, h + 1] = nxt
+        cur = nxt
+    if (cur != dst).any():
+        i = int(np.flatnonzero(cur != dst)[0])
+        raise ValueError(
+            f"path {int(src[i])}->{int(dst[i])} exceeds diameter {diameter}")
+    return nodes
 
 
 def minimal_path(next_hop: np.ndarray, s: int, d: int) -> List[int]:

@@ -1,11 +1,31 @@
 """Production meshes.  Functions only -- importing this module never touches
-jax device state (required: the dry-run sets XLA_FLAGS before first init)."""
+jax device state (required: the dry-run sets XLA_FLAGS before first init).
+
+JAX-version constraint: `jax.sharding.AxisType` (and `jax.make_mesh`'s
+`axis_types=` keyword) only exist on newer JAX; the pinned toolchain runs
+JAX 0.4.37, which has neither.  `make_mesh` below passes `axis_types` only
+when available -- explicit-Auto and the old implicit default are equivalent
+for every mesh we build.  Use it instead of calling `jax.make_mesh` directly.
+"""
 
 from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = ["make_mesh", "make_production_mesh", "make_test_mesh"]
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """`jax.make_mesh` with Auto axis types when this JAX supports them."""
+    kwargs = {"devices": devices} if devices is not None else {}
+    if hasattr(jax.sharding, "AxisType"):
+        try:
+            return jax.make_mesh(shape, axes, **kwargs,
+                                 axis_types=(jax.sharding.AxisType.Auto,)
+                                 * len(axes))
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(shape, axes, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,15 +34,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     (fabric/placement.py); the pod axis models the inter-pod optical fabric."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for CPU integration tests (requires >= data*model[*pod]
     visible devices, e.g. via --xla_force_host_platform_device_count)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

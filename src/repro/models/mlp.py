@@ -163,13 +163,13 @@ def moe_apply(p, x, cfg: ModelConfig, mesh=None,
             y = run(x3d, router, wg, wu, wd, e_start, e_local)
             return jax.lax.psum(y, "model")
 
-        out = jax.shard_map(
+        from ..parallel.compat import shard_map
+        out = shard_map(
             shard_fn, mesh=mesh,
             in_specs=(P(dp, None, None), P(None, None),
                       P("model", None, None), P("model", None, None),
                       P("model", None, None)),
             out_specs=P(dp, None, None),
-            check_vma=False,
         )(x, p["router"], p["wg"], p["wu"], p["wd"])
 
     if cfg.shared_d_ff:

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 __all__ = ["gpipe"]
 
 
@@ -81,9 +83,8 @@ def gpipe(stage_fn: Callable, stage_params, x_mb: jnp.ndarray, mesh,
         return out_buf
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(pspec, spec_x()),
         out_specs=spec_x(),
-        check_vma=False,
     )(stage_params, x_mb)

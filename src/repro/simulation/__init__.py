@@ -1,5 +1,6 @@
 """Fluid network simulator reproducing the paper's §VIII evaluation."""
 
 from .traffic import TrafficPattern, make_pattern, PATTERNS  # noqa: F401
-from .paths import FlowPaths, build_flow_paths, build_directed_edges  # noqa: F401
+from .paths import (FlowPaths, build_flow_paths,  # noqa: F401
+                    build_flow_paths_reference, build_directed_edges)
 from .fluid import FluidResult, evaluate_load, saturation_throughput, latency_curve  # noqa: F401

@@ -7,24 +7,39 @@ Candidate kinds per routing mode (paper §VII):
   ecmp     -- K random shortest paths (used for fat-tree "non-blocking" min).
   valiant  -- K random intermediates r != s, d; min(s,r) + min(r,d).
   cvaliant -- Compact Valiant: intermediates from N(s), skipping neighbors
-              whose min path to d bounces through s; empty for adjacent pairs
-              (the paper falls back to minimal there).
+              whose min path to d bounces through s; falls back to general
+              Valiant for adjacent pairs (paper §VII-B bounce-back rule).
   ugal     -- {min} + valiant candidates (queue-adaptive choice in solver).
   ugal_pf  -- {min} + cvaliant candidates + 2/3 threshold gate in solver.
+
+Two engines build identical outputs:
+
+  * `engine="vectorized"` (default) -- batched minimal-path extraction via
+    next-hop gathers (`repro.core.routing.minimal_paths`), a dense
+    [n, n] -> directed-edge-id table (`DirectedEdges.table`), and array-level
+    candidate construction (vectorized intermediates, batched segment
+    stitching, vectorized bounce-back filtering).  No Python loop over flows.
+  * `engine="reference"` -- the original per-flow scalar loop, kept as the
+    executable specification.
+
+Both engines consume the same pre-drawn randomness (`_draw_randomness`), so
+for any (pattern, mode, k, seed) they produce bit-identical
+edges/hops/valid/is_min/first_edge -- see tests/test_simulation.py.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from ..core.graph import Graph
-from ..core.routing import RoutingTables, minimal_path
+from ..core.routing import RoutingTables, minimal_path, minimal_paths
 from .traffic import TrafficPattern
 
-__all__ = ["DirectedEdges", "FlowPaths", "build_directed_edges", "build_flow_paths"]
+__all__ = ["DirectedEdges", "FlowPaths", "build_directed_edges",
+           "build_flow_paths", "build_flow_paths_reference"]
 
 
 @dataclass
@@ -33,12 +48,50 @@ class DirectedEdges:
     offsets: np.ndarray  # [n+1]
     targets: np.ndarray  # [E_dir]
     num: int
+    _table: Optional[np.ndarray] = field(default=None, repr=False)
+    _nb_pad: Optional[Tuple[np.ndarray, np.ndarray]] = field(default=None,
+                                                             repr=False)
+
+    @property
+    def n(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def table(self) -> np.ndarray:
+        """Dense [n, n] int32 lookup: table[u, v] = directed edge id, -1 if
+        (u, v) is not an edge.  Built lazily, O(n^2) memory."""
+        if self._table is None:
+            n = self.n
+            t = -np.ones((n, n), dtype=np.int32)
+            srcs = np.repeat(np.arange(n), np.diff(self.offsets))
+            t[srcs, self.targets] = np.arange(self.num, dtype=np.int32)
+            self._table = t
+        return self._table
+
+    def edge_ids(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+        """Vectorized lookup; -1 where (u, v) is not an edge."""
+        return self.table[u, v]
 
     def edge_id(self, u: int, v: int) -> int:
+        """Scalar fallback (CSR binary search; no dense table needed)."""
         nb = self.targets[self.offsets[u]:self.offsets[u + 1]]
         i = int(np.searchsorted(nb, v))
-        assert i < len(nb) and nb[i] == v, f"no edge {u}->{v}"
+        if i >= len(nb) or nb[i] != v:
+            raise ValueError(f"no edge {u}->{v}")
         return int(self.offsets[u] + i)
+
+    def padded_neighbors(self) -> Tuple[np.ndarray, np.ndarray]:
+        """([n, deg_max] int32 neighbor matrix padded with -1, [n] degrees)."""
+        if self._nb_pad is None:
+            deg = np.diff(self.offsets)
+            dmax = int(deg.max()) if len(deg) else 0
+            nb = -np.ones((self.n, dmax), dtype=np.int32)
+            rows = np.repeat(np.arange(self.n), deg)
+            cols = np.concatenate([np.arange(d) for d in deg]) if self.num \
+                else np.zeros(0, dtype=np.int64)
+            nb[rows, cols] = self.targets
+            self._nb_pad = (nb, deg.astype(np.int64))
+        return self._nb_pad
 
 
 def build_directed_edges(g: Graph) -> DirectedEdges:
@@ -60,45 +113,351 @@ class FlowPaths:
     first_edge: np.ndarray  # [F] int32 first link of the *min* path (UGAL gate)
     num_links: int
     mode: str
+    _device: Optional[tuple] = field(default=None, repr=False, compare=False)
 
+    def device_arrays(self) -> tuple:
+        """Solver-ready jax views of the path arrays, cached on the instance
+        so repeated solver calls (bisection probes, latency sweeps) skip both
+        the host-side preprocessing and the host->device copies.
+
+        Returns (eidx, loads_rep, valid, is_min, first_edge, demand):
+
+          eidx      [F, K, L] int32 -- edge ids with -1 pads remapped to
+                    `num_links`, so gathers from a length num_links+1 table
+                    land on a zero pad slot (no masking multiply needed).
+          loads_rep -- incidence structure for link-load accumulation:
+                    ("pad", inc [E, W] int32) gathers each edge's candidate
+                    weights from a padded per-edge incidence matrix (pad
+                    index F*K -> appended zero weight); dense gathers beat
+                    scatter-add ~5x on XLA:CPU and accumulate edge-locally.
+                    ("scatter",) falls back to plain scatter-add when padding
+                    would blow up (pathologically skewed incidence counts --
+                    those cases are small, so scatter speed doesn't matter,
+                    and scatter keeps float32 rounding proportional to each
+                    edge's own load rather than a global prefix sum).
+        """
+        if self._device is None:
+            import jax.numpy as jnp
+            f, k, l = self.edges.shape
+            flat = self.edges.reshape(-1)
+            real = flat >= 0
+            nnz = int(real.sum())
+            fk = np.repeat(np.arange(f * k, dtype=np.int32), l)[real]
+            e_of = flat[real]
+            order = np.argsort(e_of, kind="stable")
+            counts = np.bincount(e_of, minlength=self.num_links)
+            w_max = int(counts.max()) if nnz else 0
+            if self.num_links * w_max <= max(4 * nnz, 2_000_000):
+                inc = np.full((self.num_links, w_max), f * k, dtype=np.int32)
+                cols = np.concatenate([np.arange(c) for c in counts]) \
+                    if nnz else np.zeros(0, dtype=np.int64)
+                inc[e_of[order], cols] = fk[order]
+                loads_rep = ("pad", jnp.asarray(inc))
+            else:
+                loads_rep = ("scatter",)
+            eidx = np.where(self.edges >= 0, self.edges, self.num_links)
+            self._device = (jnp.asarray(eidx.astype(np.int32)), loads_rep,
+                            jnp.asarray(self.valid),
+                            jnp.asarray(self.is_min),
+                            jnp.asarray(self.first_edge),
+                            jnp.asarray(self.pattern.demand))
+        return self._device
+
+
+# --------------------------------------------------------------------------
+# shared mode layout + randomness (consumed identically by both engines)
+# --------------------------------------------------------------------------
+
+def _mode_layout(mode: str, k_candidates: int):
+    """(include_min, alt_kind, k_alt, k_total) for a routing mode."""
+    if mode not in ("min", "ecmp", "valiant", "cvaliant", "ugal", "ugal_pf"):
+        raise ValueError(f"unknown routing mode {mode!r}")
+    include_min = mode in ("min", "ugal", "ugal_pf")
+    alt_kind = {"min": None, "ecmp": "ecmp", "valiant": "valiant",
+                "cvaliant": "cvaliant", "ugal": "valiant",
+                "ugal_pf": "cvaliant"}[mode]
+    k_alt = 0 if alt_kind in (None, "ecmp") else k_candidates
+    if mode == "ecmp":
+        k_total = k_candidates
+    else:
+        k_total = (1 if include_min else 0) + k_alt
+    return include_min, alt_kind, k_alt, k_total
+
+
+def _draw_randomness(rng: np.random.Generator, alt_kind: Optional[str],
+                     f: int, k: int, n: int, deg_max: int,
+                     depth: int) -> Dict[str, np.ndarray]:
+    """All random draws, generated up front in a fixed order.
+
+    ecmp      -> U [F, K, depth]  uniform (depth = diameter, the max hops a
+                 shortest path can take); hop h picks good-neighbor index
+                 floor(U * count).
+    valiant   -> RV [F, K]     integers in [0, n-2); mapped to r != s, d by
+                 the order-statistics skip trick (no rejection loop).
+    cvaliant  -> RV (adjacent-pair Valiant fallback) + KEYS [F, deg_max]
+                 uniform sort keys selecting min(k, #cands) intermediates
+                 from N(s) without replacement.
+    """
+    draws: Dict[str, np.ndarray] = {}
+    if alt_kind == "ecmp":
+        draws["U"] = rng.random((f, k, depth))
+    elif alt_kind == "valiant":
+        draws["RV"] = rng.integers(max(n - 2, 1), size=(f, k))
+    elif alt_kind == "cvaliant":
+        draws["RV"] = rng.integers(max(n - 2, 1), size=(f, k))
+        draws["KEYS"] = rng.random((f, deg_max))
+    return draws
+
+
+def _skip2(u, s, d):
+    """Map u in [0, n-2) to r in [0, n) with r != s and r != d (s != d)."""
+    lo = np.minimum(s, d)
+    hi = np.maximum(s, d)
+    r = u + (u >= lo)
+    return r + (r >= hi)
+
+
+# --------------------------------------------------------------------------
+# vectorized engine
+# --------------------------------------------------------------------------
+
+def _batched_path_edges(rt: RoutingTables, de: DirectedEdges,
+                        src: np.ndarray, dst: np.ndarray):
+    """Minimal paths for F (src, dst) pairs -> ([F, diameter] edge ids, -1
+    padded; [F] hop counts)."""
+    nodes = minimal_paths(rt.next_hop, src, dst, rt.diameter)  # [F, D+1]
+    u, v = nodes[:, :-1], nodes[:, 1:]
+    real = u != v
+    edges = np.where(real, de.edge_ids(u, v), np.int32(-1))
+    return edges.astype(np.int32), real.sum(axis=1).astype(np.int32)
+
+
+def _stitch(seg1_e, h1, seg2_e, lmax: int) -> np.ndarray:
+    """Concatenate per-row edge segments: seg2 starts at column h1[row].
+
+    seg1_e/seg2_e are [R, D] (-1 padded); result is [R, lmax].  Positions
+    h1 + j for j >= hops(seg2) receive seg2's -1 pad, which is what the
+    result should hold there anyway, so a single scatter suffices.
+    """
+    r, dmax = seg1_e.shape
+    out = -np.ones((r, lmax), dtype=np.int32)
+    out[:, :dmax] = seg1_e
+    cols = h1[:, None].astype(np.int64) + np.arange(seg2_e.shape[1])[None, :]
+    np.put_along_axis(out, cols, seg2_e, axis=1)
+    return out
+
+
+def _vectorized_valiant(rt, de, src, dst, rv, lmax):
+    """[F, K] intermediates from RV -> ([F, K, lmax] edges, [F, K] hops)."""
+    f, k = rv.shape
+    s_b = np.broadcast_to(src[:, None], (f, k)).ravel()
+    d_b = np.broadcast_to(dst[:, None], (f, k)).ravel()
+    r_b = _skip2(rv.ravel(), s_b, d_b)
+    e1, h1 = _batched_path_edges(rt, de, s_b, r_b)
+    e2, h2 = _batched_path_edges(rt, de, r_b, d_b)
+    edges = _stitch(e1, h1, e2, lmax).reshape(f, k, lmax)
+    return edges, (h1 + h2).reshape(f, k).astype(np.int32)
+
+
+def _vectorized_cvaliant_select(rt, de, src, dst, keys):
+    """Bounce-back-filtered intermediate selection from N(s), vectorized.
+
+    Returns ([F, K] selected neighbors, -1 pad; [F] candidate counts) where
+    K = keys-implied k_alt is applied by the caller (we return the full key
+    ordering and let the caller slice)."""
+    nb, deg = de.padded_neighbors()  # [n, dmax]
+    nb_s = nb[src]  # [F, dmax]
+    present = nb_s >= 0
+    safe_nb = np.where(present, nb_s, 0)
+    ok = present & (rt.next_hop[safe_nb, dst[:, None]] != src[:, None]) \
+        & (nb_s != dst[:, None])
+    cnt = ok.sum(axis=1).astype(np.int64)
+    masked = np.where(ok, keys[:, :nb.shape[1]], np.inf)
+    order = np.argsort(masked, axis=1, kind="stable")  # valid slots first
+    return np.take_along_axis(nb_s, order, axis=1), cnt
+
+
+# Precomputing the per-(u, d) shortest-path-successor table costs
+# O(n^2 * deg_max) memory; above this many entries fall back to per-hop
+# neighbor gathers instead.
+_ECMP_TABLE_MAX_ENTRIES = 16_000_000
+
+
+def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
+                dst: np.ndarray, u_draw: np.ndarray, k: int) -> np.ndarray:
+    """K random shortest paths per flow -> [F, K, diameter + 1] node walks.
+
+    Hop h of candidate (i, c) picks good-neighbor index
+    floor(U[i, c, h] * count) among the neighbors of the current node that
+    make progress toward dst[i], in sorted-neighbor order (matching the
+    scalar reference exactly).
+    """
+    f = len(src)
+    nb, _ = de.padded_neighbors()
+    n, dmax = nb.shape
+    nodes = np.empty((f, k, rt.diameter + 1), dtype=np.int64)
+    cur = np.broadcast_to(src[:, None], (f, k)).copy()
+    nodes[:, :, 0] = cur
+    d_b = np.broadcast_to(dst[:, None], (f, k))
+
+    if n * n * dmax <= _ECMP_TABLE_MAX_ENTRIES:
+        # succ[u, d, j] = j-th neighbor of u on a shortest path to d
+        # (neighbor order preserved); cnt[u, d] = how many there are.
+        present = nb >= 0
+        dist_nb = rt.dist[np.where(present, nb, 0)]  # [n, dmax, n]
+        good = (dist_nb.transpose(0, 2, 1) == (rt.dist - 1)[:, :, None]) \
+            & present[:, None, :]
+        cnt_t = good.sum(axis=2).astype(np.int64)
+        order = np.argsort(~good, axis=2, kind="stable")  # good slots first
+        succ = np.take_along_axis(
+            np.broadcast_to(nb[:, None, :], good.shape), order, axis=2)
+        for h in range(rt.diameter):
+            active = cur != d_b
+            j = np.floor(u_draw[:, :, h] * cnt_t[cur, d_b]).astype(np.int64)
+            cur = np.where(active, succ[cur, d_b, j], cur).astype(np.int64)
+            nodes[:, :, h + 1] = cur
+        return nodes
+
+    for h in range(rt.diameter):
+        active = cur != d_b
+        nb_cur = nb[cur]  # [F, K, dmax]
+        present = nb_cur >= 0
+        safe = np.where(present, nb_cur, 0)
+        good = present & (rt.dist[safe, d_b[:, :, None]]
+                          == (rt.dist[cur, d_b] - 1)[:, :, None])
+        cnt = good.sum(axis=2)
+        j = np.floor(u_draw[:, :, h] * cnt).astype(np.int64)
+        # position of the (j+1)-th good neighbor
+        pos = np.argmax(np.cumsum(good, axis=2) == (j + 1)[:, :, None], axis=2)
+        nxt = np.take_along_axis(nb_cur, pos[:, :, None], axis=2)[:, :, 0]
+        cur = np.where(active, nxt, cur).astype(np.int64)
+        nodes[:, :, h + 1] = cur
+    return nodes
+
+
+def _build_vectorized(rt: RoutingTables, pattern: TrafficPattern, mode: str,
+                      k_candidates: int, seed: int) -> FlowPaths:
+    rng = np.random.default_rng(seed)
+    de = build_directed_edges(rt.graph)
+    n = rt.graph.n
+    f = pattern.num_flows
+    src = pattern.src.astype(np.int64)
+    dst = pattern.dst.astype(np.int64)
+
+    include_min, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
+    lmax = 2 * max(2, rt.diameter)
+    _, deg = de.padded_neighbors()
+    draws = _draw_randomness(rng, alt_kind, f, k_total if mode == "ecmp" else k_alt,
+                             n, int(deg.max()) if len(deg) else 0,
+                             rt.diameter)
+
+    edges = -np.ones((f, k_total, lmax), dtype=np.int32)
+    hops = np.zeros((f, k_total), dtype=np.int32)
+    valid = np.zeros((f, k_total), dtype=bool)
+    is_min = np.zeros((f, k_total), dtype=bool)
+
+    min_e, min_h = _batched_path_edges(rt, de, src, dst)  # [F, D], [F]
+    first_edge = min_e[:, 0].copy()
+    col = 0
+    if include_min:
+        edges[:, 0, :min_e.shape[1]] = min_e
+        hops[:, 0] = min_h
+        valid[:, 0] = True
+        is_min[:, 0] = True
+        col = 1
+
+    if mode == "ecmp":
+        nodes = _ecmp_nodes(rt, de, src, dst, draws["U"], k_total)
+        u, v = nodes[:, :, :-1], nodes[:, :, 1:]
+        real = u != v
+        e = np.where(real, de.edge_ids(u, v), np.int32(-1))
+        edges[:, :, :e.shape[2]] = e
+        hops[:, :] = real.sum(axis=2)
+        valid[:, :] = True
+        is_min[:, :] = True
+    elif alt_kind == "valiant":
+        e, h = _vectorized_valiant(rt, de, src, dst, draws["RV"], lmax)
+        edges[:, col:col + k_alt] = e
+        hops[:, col:col + k_alt] = h
+        valid[:, col:col + k_alt] = True
+    elif alt_kind == "cvaliant":
+        # non-adjacent rows: intermediates from N(s); adjacent rows fall back
+        # to general Valiant (paper §VII-B), computed only for those rows
+        # (indexing the pre-drawn RV keeps outputs bit-identical).
+        sel_nb, cnt = _vectorized_cvaliant_select(rt, de, src, dst,
+                                                  draws["KEYS"])
+        # [F, K] selected intermediates; junk past cnt.  k_alt may exceed
+        # deg_max (sel_nb's width) -- the extra slots can never hold a
+        # candidate, so leave them at -1.
+        k_take = min(k_alt, sel_nb.shape[1])
+        sel = np.full((f, k_alt), -1, dtype=np.int64)
+        sel[:, :k_take] = sel_nb[:, :k_take]
+        n_sel = np.minimum(cnt, k_alt)  # [F]
+        slot_ok = np.arange(k_alt)[None, :] < n_sel[:, None]  # [F, K]
+        safe_sel = np.where(slot_ok, sel, dst[:, None])  # route-safe filler
+        f_b = np.broadcast_to(np.arange(f)[:, None], (f, k_alt)).ravel()
+        e2, h2 = _batched_path_edges(rt, de, safe_sel.ravel(),
+                                     dst[f_b].reshape(-1))
+        e0 = de.edge_ids(src[:, None], safe_sel)  # [F, K] first hop s->r
+        ec = -np.ones((f * k_alt, lmax), dtype=np.int32)
+        ec[:, 0] = e0.ravel()
+        ec[:, 1:1 + e2.shape[1]] = e2
+        ec = ec.reshape(f, k_alt, lmax)
+        hc = (1 + h2).reshape(f, k_alt).astype(np.int32)
+        edges_blk = np.where(slot_ok[:, :, None], ec, np.int32(-1))
+        hops_blk = np.where(slot_ok, hc, 0).astype(np.int32)
+        valid_blk = slot_ok.copy()
+        adj = rt.dist[src, dst] == 1  # [F]
+        if adj.any():
+            ev, hv = _vectorized_valiant(rt, de, src[adj], dst[adj],
+                                         draws["RV"][adj], lmax)
+            edges_blk[adj] = ev
+            hops_blk[adj] = hv
+            valid_blk[adj] = True
+        edges[:, col:col + k_alt] = edges_blk
+        hops[:, col:col + k_alt] = hops_blk
+        valid[:, col:col + k_alt] = valid_blk
+
+    return FlowPaths(pattern=pattern, edges=edges, hops=hops, valid=valid,
+                     is_min=is_min, first_edge=first_edge, num_links=de.num,
+                     mode=mode)
+
+
+# --------------------------------------------------------------------------
+# scalar reference engine (the executable spec)
+# --------------------------------------------------------------------------
 
 def _path_edges(de: DirectedEdges, path) -> list:
     return [de.edge_id(path[i], path[i + 1]) for i in range(len(path) - 1)]
 
 
-def _random_shortest_path(rt: RoutingTables, rng, s: int, d: int) -> list:
-    """Uniform-ish random shortest path by random next-hop descent."""
-    path = [s]
-    u = s
-    while u != d:
-        nbs = rt.graph.neighbors[u]
-        good = nbs[rt.dist[nbs, d] == rt.dist[u, d] - 1]
-        u = int(good[rng.integers(len(good))])
-        path.append(u)
-    return path
-
-
-def build_flow_paths(rt: RoutingTables, pattern: TrafficPattern, mode: str,
-                     k_candidates: int = 8, seed: int = 0) -> FlowPaths:
+def build_flow_paths_reference(rt: RoutingTables, pattern: TrafficPattern,
+                               mode: str, k_candidates: int = 8,
+                               seed: int = 0) -> FlowPaths:
+    """Per-flow scalar builder; consumes the same pre-drawn randomness as the
+    vectorized engine, so outputs are bit-identical for equal arguments."""
     rng = np.random.default_rng(seed)
     de = build_directed_edges(rt.graph)
     n = rt.graph.n
     f = pattern.num_flows
 
-    include_min = mode in ("min", "ugal", "ugal_pf")
-    alt_kind = {"min": None, "ecmp": "ecmp", "valiant": "valiant",
-                "cvaliant": "cvaliant", "ugal": "valiant", "ugal_pf": "cvaliant"}[mode]
-    k_alt = 0 if alt_kind is None else k_candidates
-    k_total = (1 if include_min or mode == "ecmp" else 0) + k_alt
-    if mode == "ecmp":
-        k_total = k_candidates
-
+    include_min, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
     lmax = 2 * max(2, rt.diameter)
+    _, deg = de.padded_neighbors()
+    draws = _draw_randomness(rng, alt_kind, f,
+                             k_total if mode == "ecmp" else k_alt,
+                             n, int(deg.max()) if len(deg) else 0,
+                             rt.diameter)
+
     edges = -np.ones((f, k_total, lmax), dtype=np.int32)
     hops = np.zeros((f, k_total), dtype=np.int32)
     valid = np.zeros((f, k_total), dtype=bool)
     is_min = np.zeros((f, k_total), dtype=bool)
     first_edge = np.zeros(f, dtype=np.int32)
+
+    def valiant_nodes(i: int, c: int, s: int, d: int) -> list:
+        r = int(_skip2(int(draws["RV"][i, c]), s, d))
+        return minimal_path(rt.next_hop, s, r) + minimal_path(rt.next_hop, r, d)[1:]
 
     for i in range(f):
         s, d = int(pattern.src[i]), int(pattern.dst[i])
@@ -114,50 +473,39 @@ def build_flow_paths(rt: RoutingTables, pattern: TrafficPattern, mode: str,
             col += 1
         if mode == "ecmp":
             for c in range(k_total):
-                p = _random_shortest_path(rt, rng, s, d)
-                pe = _path_edges(de, p)
+                path = [s]
+                u, h = s, 0
+                while u != d:
+                    nbs = rt.graph.neighbors[u]
+                    good = nbs[rt.dist[nbs, d] == rt.dist[u, d] - 1]
+                    u = int(good[int(draws["U"][i, c, h] * len(good))])
+                    path.append(u)
+                    h += 1
+                pe = _path_edges(de, path)
                 edges[i, c, :len(pe)] = pe
                 hops[i, c] = len(pe)
                 valid[i, c] = True
                 is_min[i, c] = True
             continue
-        if alt_kind == "valiant":
-            for _ in range(k_alt):
-                while True:
-                    r = int(rng.integers(n))
-                    if r != s and r != d:
-                        break
-                p = minimal_path(rt.next_hop, s, r) + minimal_path(rt.next_hop, r, d)[1:]
-                pe = _path_edges(de, p)
+        if alt_kind == "valiant" or (alt_kind == "cvaliant"
+                                     and rt.dist[s, d] == 1):
+            # adjacent pair under Compact Valiant: bounce-back through s is
+            # unavoidable -> fall back to general Valiant (paper §VII-B)
+            for c in range(k_alt):
+                pe = _path_edges(de, valiant_nodes(i, c, s, d))
                 edges[i, col, :len(pe)] = pe
                 hops[i, col] = len(pe)
                 valid[i, col] = True
                 col += 1
         elif alt_kind == "cvaliant":
-            if rt.dist[s, d] == 1:
-                # adjacent pair: Compact Valiant would bounce through s
-                # (paper §VII-B) -> fall back to *general* Valiant
-                for _ in range(k_alt):
-                    while True:
-                        r = int(rng.integers(n))
-                        if r != s and r != d:
-                            break
-                    p = minimal_path(rt.next_hop, s, r) + minimal_path(rt.next_hop, r, d)[1:]
-                    pe = _path_edges(de, p)
-                    edges[i, col, :len(pe)] = pe
-                    hops[i, col] = len(pe)
-                    valid[i, col] = True
-                    col += 1
-                continue
             nbs = rt.graph.neighbors[s]
             ok = (rt.next_hop[nbs, d] != s) & (nbs != d)
             cands = nbs[ok]
-            sel = (cands if len(cands) <= k_alt
-                   else rng.choice(cands, size=k_alt, replace=False))
+            keys = draws["KEYS"][i, :len(nbs)][ok]
+            sel = cands[np.argsort(keys, kind="stable")][:k_alt]
             for r in sel:
                 r = int(r)
-                p = [s] + minimal_path(rt.next_hop, r, d)
-                pe = _path_edges(de, p)
+                pe = _path_edges(de, [s] + minimal_path(rt.next_hop, r, d))
                 edges[i, col, :len(pe)] = pe
                 hops[i, col] = len(pe)
                 valid[i, col] = True
@@ -166,3 +514,18 @@ def build_flow_paths(rt: RoutingTables, pattern: TrafficPattern, mode: str,
     return FlowPaths(pattern=pattern, edges=edges, hops=hops, valid=valid,
                      is_min=is_min, first_edge=first_edge, num_links=de.num,
                      mode=mode)
+
+
+def build_flow_paths(rt: RoutingTables, pattern: TrafficPattern, mode: str,
+                     k_candidates: int = 8, seed: int = 0,
+                     engine: str = "vectorized") -> FlowPaths:
+    """Build candidate paths for every flow of `pattern` under `mode`.
+
+    engine="vectorized" (default) runs the batched array engine;
+    engine="reference" runs the per-flow scalar spec.  Identical outputs.
+    """
+    if engine == "vectorized":
+        return _build_vectorized(rt, pattern, mode, k_candidates, seed)
+    if engine == "reference":
+        return build_flow_paths_reference(rt, pattern, mode, k_candidates, seed)
+    raise ValueError(f"unknown engine {engine!r}")

@@ -33,6 +33,17 @@ class TrafficPattern:
     demand: np.ndarray  # [F] float32, flits/cycle per unit offered load
     endpoints_per_router: int
 
+    def __post_init__(self):
+        # canonical dtypes: the vectorized path engine gathers on these
+        # arrays directly, and self-flows have no first link (UGAL gate).
+        self.src = np.asarray(self.src, dtype=np.int32)
+        self.dst = np.asarray(self.dst, dtype=np.int32)
+        self.demand = np.asarray(self.demand, dtype=np.float32)
+        if not (len(self.src) == len(self.dst) == len(self.demand)):
+            raise ValueError("src/dst/demand length mismatch")
+        if (self.src == self.dst).any():
+            raise ValueError("self-flows (src == dst) are not allowed")
+
     @property
     def num_flows(self) -> int:
         return len(self.src)

@@ -1,0 +1,112 @@
+"""`hypothesis` fallback for environments where it isn't installed.
+
+The pinned test container ships without `hypothesis` (it's an optional
+`[test]` extra, see pyproject.toml).  When the real package is available we
+re-export it untouched; otherwise a minimal seeded-random shim runs each
+`@given` test `max_examples` times with independently drawn inputs.  The shim
+covers only what this suite uses: `integers`, `sampled_from`, `lists`,
+`data`, `@settings(max_examples=..., deadline=...)`.  No shrinking, no
+database -- failures print the drawn values instead.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn, desc):
+            self._draw = draw_fn
+            self._desc = desc
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return f"shim.{self._desc}"
+
+    class _DataObject:
+        """Mimics `st.data()`'s draw handle."""
+
+        def __init__(self, rng):
+            self._rng = rng
+            self.drawn = []
+
+        def draw(self, strategy, label=None):
+            v = strategy.example_from(self._rng)
+            self.drawn.append(v)
+            return v
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng), "data()")
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                f"integers({min_value},{max_value})")
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                             f"sampled_from({seq!r})")
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elem.example_from(rng) for _ in range(size)]
+            return _Strategy(draw, f"lists({elem!r})")
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _StrategiesShim()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            # NB: no functools.wraps -- __wrapped__ would re-expose the
+            # strategy-bound parameters and pytest would demand fixtures
+            # for them.  The wrapper's visible signature is ().
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                # deterministic per-test seed so failures reproduce
+                # (crc32, not hash(): string hashing is salted per process)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    drawn = [s.example_from(rng) for s in strategies]
+                    kw_drawn = {k: s.example_from(rng)
+                                for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn, **kw_drawn, **kwargs)
+                    except Exception:
+                        print(f"hypothesis-shim: example {i} failed with "
+                              f"args={drawn!r} kwargs={kw_drawn!r}")
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

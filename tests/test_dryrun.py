@@ -19,6 +19,7 @@ def _run(args, out):
         capture_output=True, text=True, env=env, timeout=560)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [("qwen2-0.5b", "train_4k"),
                                         ("qwen2-0.5b", "decode_32k")])
 def test_dryrun_cell_single_pod(arch, shape):
@@ -32,7 +33,8 @@ def test_dryrun_cell_single_pod(arch, shape):
         assert res["memory"]["fits_16GB"]
 
 
-def test_dryrun_multipod_512(): 
+@pytest.mark.slow
+def test_dryrun_multipod_512():
     """The multi-pod (2x16x16 = 512 chips) mesh must lower and compile."""
     with tempfile.TemporaryDirectory() as d:
         r = _run(["--arch", "qwen2-0.5b", "--shape", "train_4k",

@@ -3,6 +3,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = r'''
@@ -20,9 +22,10 @@ from repro.train.data import DataConfig, SyntheticPipeline
 from jax.sharding import PartitionSpec as P
 
 cfg = get_config("qwen3-4b").scaled_down(dtype="float32", num_layers=2)
-mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
-mesh_b = jax.make_mesh((2, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2,
-                       devices=jax.devices()[:4])
+from repro.launch.mesh import make_mesh
+
+mesh_a = make_mesh((4, 2), ("data", "model"))
+mesh_b = make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
 
 def make(mesh):
     model = build_model(cfg, mesh=mesh, remat="none")
@@ -60,6 +63,7 @@ print("ELASTIC_OK", loss_a)
 '''
 
 
+@pytest.mark.slow
 def test_elastic_reshard_across_meshes():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")

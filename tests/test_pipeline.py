@@ -14,8 +14,9 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.parallel.pipeline import gpipe
 
-mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4, 2), ("pod", "data"))
 L, D = 8, 16
 n_stages = 4
 key = jax.random.PRNGKey(0)
@@ -47,6 +48,7 @@ print("PIPELINE_OK")
 '''
 
 
+@pytest.mark.slow
 def test_gpipe_matches_sequential():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")

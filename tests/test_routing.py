@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import (build_routing, compact_valiant_candidates,
-                                minimal_path, next_hop_table,
+                                minimal_path, minimal_paths, next_hop_table,
                                 polarfly_next_hop_table, valiant_path)
 
 
@@ -24,6 +24,35 @@ def test_algebraic_next_hop_matches_bfs(q):
             assert len(p) - 1 == rt.dist[s, d]
             p2 = minimal_path(nh_bfs, s, d)
             assert len(p2) - 1 == rt.dist[s, d]
+
+
+@pytest.mark.parametrize("q", [5, 7])
+def test_batched_minimal_paths_match_scalar(q):
+    """minimal_paths walks all pairs at once and agrees with minimal_path."""
+    pf = build_polarfly(q)
+    rt = build_routing(pf.graph, pf)
+    n = pf.n
+    s, d = np.meshgrid(np.arange(n), np.arange(n), indexing="ij")
+    mask = s != d
+    src, dst = s[mask], d[mask]
+    nodes = rt.paths(src, dst)  # [F, diameter + 1]
+    assert nodes.shape == (len(src), rt.diameter + 1)
+    hops = (nodes[:, :-1] != nodes[:, 1:]).sum(axis=1)
+    assert np.array_equal(hops, rt.dist[src, dst])
+    assert (nodes[:, -1] == dst).all()
+    for i in range(0, len(src), 997):
+        expect = minimal_path(rt.next_hop, int(src[i]), int(dst[i]))
+        got = nodes[i, :len(expect)]
+        assert np.array_equal(got, expect)
+
+
+def test_batched_minimal_paths_unreachable_raises():
+    pf = build_polarfly(5)
+    rt = build_routing(pf.graph, pf)
+    nh = rt.next_hop.copy()
+    nh[0, 1] = -1  # sever the table entry
+    with pytest.raises(ValueError, match="no route"):
+        minimal_paths(nh, np.array([0]), np.array([1]), rt.diameter)
 
 
 def test_valiant_and_compact_valiant_lengths():

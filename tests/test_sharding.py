@@ -1,7 +1,7 @@
 """Sharding rules + HLO cost parser units."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.launch.hlo import parse_module
 
@@ -49,22 +49,21 @@ def test_hlo_parser_trip_counts():
 def test_spec_for_divisibility(dim, size, axis):
     """spec_for shards iff divisible; never produces invalid specs."""
     import jax
+    from repro.launch.mesh import make_mesh
     from repro.parallel.sharding import spec_for
     if jax.device_count() < 1:
         pytest.skip("no devices")
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     spec = spec_for((dim,), ("ff",), mesh)
     if dim % 1 == 0:
         assert spec is not None
 
 
 def test_spec_rules_fallbacks():
-    import jax
+    from repro.launch.mesh import make_mesh
     from repro.parallel.sharding import spec_for
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     # 14 heads on 1-sized axis: trivially sharded or replicated, never invalid
     s = spec_for((14, 64), ("qheads", "head_dim"), mesh)
     assert isinstance(s, P)

@@ -1,11 +1,19 @@
-"""§VIII fluid-simulator claims (scaled to q=7/13 for CPU speed)."""
+"""§VIII fluid-simulator claims (scaled to q=7/13 for CPU speed) plus
+vectorized-vs-reference path-engine equivalence and speedup."""
+import time
+
 import numpy as np
 import pytest
 
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
-from repro.simulation import (build_flow_paths, evaluate_load, make_pattern,
+from repro.simulation import (build_flow_paths, build_flow_paths_reference,
+                              evaluate_load, make_pattern,
                               saturation_throughput)
+from repro.simulation.paths import build_directed_edges
+
+ALL_MODES = ("min", "ecmp", "valiant", "cvaliant", "ugal", "ugal_pf")
+FIELDS = ("edges", "hops", "valid", "is_min", "first_edge")
 
 
 @pytest.fixture(scope="module")
@@ -62,3 +70,87 @@ def test_perm_khop_patterns():
         pat = make_pattern(f"perm{k}hop", rt, p=4, seed=1)
         d = rt.dist[pat.src, pat.dst]
         assert (d == k).all()
+
+
+# ---------------------------------------------------------------------------
+# vectorized path engine vs the scalar reference
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pf7_intact_and_damaged():
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    removed = pf.graph.edge_list[::9][:4]  # keeps the graph connected
+    damaged = pf.graph.subgraph_without_edges(removed)
+    rt_dmg = build_routing(damaged)
+    assert rt_dmg.diameter > rt.diameter  # damage actually stretches paths
+    return rt, rt_dmg
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_vectorized_matches_reference(pf7_intact_and_damaged, mode, which):
+    """Same seed => bit-identical edges/hops/valid/is_min/first_edge."""
+    rt, rt_dmg = pf7_intact_and_damaged
+    rt = rt if which == "intact" else rt_dmg
+    pat = make_pattern("uniform", rt, p=4, seed=2)
+    vec = build_flow_paths(rt, pat, mode, k_candidates=6, seed=5)
+    ref = build_flow_paths_reference(rt, pat, mode, k_candidates=6, seed=5)
+    for name in FIELDS:
+        assert np.array_equal(getattr(vec, name), getattr(ref, name)), \
+            f"{mode}/{which}: {name} differs"
+    assert vec.num_links == ref.num_links and vec.mode == ref.mode
+
+
+@pytest.mark.slow  # ~35s: deliberately times the scalar reference
+def test_vectorized_speedup_pf13(pf13):
+    """Acceptance: >= 10x faster than the scalar reference on PF(13) uniform
+    (p=7), every mode."""
+    pf, rt = pf13
+    pat = make_pattern("uniform", rt, p=7)
+    t_vec = t_ref = 0.0
+    for mode in ALL_MODES:
+        t0 = time.perf_counter()
+        build_flow_paths(rt, pat, mode, k_candidates=8, seed=0)
+        t1 = time.perf_counter()
+        build_flow_paths_reference(rt, pat, mode, k_candidates=8, seed=0)
+        t2 = time.perf_counter()
+        t_vec += t1 - t0
+        t_ref += t2 - t1
+    speedup = t_ref / t_vec
+    print(f"\npath-engine speedup (all modes, {pat.num_flows} flows): "
+          f"vec {t_vec:.2f}s ref {t_ref:.2f}s = {speedup:.1f}x")
+    assert speedup >= 10.0
+
+
+@pytest.mark.parametrize("mode", ["ecmp", "valiant", "cvaliant", "ugal_pf"])
+def test_vectorized_k_exceeding_degree(pf7_intact_and_damaged, mode):
+    """k_candidates > deg_max: cvaliant caps per-flow candidates; engines
+    still agree (regression: vectorized slot mask used to outgrow sel)."""
+    rt, _ = pf7_intact_and_damaged
+    pat = make_pattern("uniform", rt, p=4, seed=0)
+    vec = build_flow_paths(rt, pat, mode, k_candidates=20, seed=1)
+    ref = build_flow_paths_reference(rt, pat, mode, k_candidates=20, seed=1)
+    for name in FIELDS:
+        assert np.array_equal(getattr(vec, name), getattr(ref, name))
+
+
+def test_edge_id_raises_on_missing_edge():
+    pf = build_polarfly(7)
+    de = build_directed_edges(pf.graph)
+    u = 0
+    non_neighbor = next(v for v in range(1, pf.n)
+                        if v not in set(int(x) for x in pf.graph.neighbors[u]))
+    with pytest.raises(ValueError, match="no edge"):
+        de.edge_id(u, non_neighbor)
+    # scalar fallback agrees with the dense table on real edges
+    v = int(pf.graph.neighbors[u][0])
+    assert de.edge_id(u, v) == de.table[u, v]
+
+
+def test_device_arrays_cached(pf13):
+    pf, rt = pf13
+    pat = make_pattern("tornado", rt, p=7)
+    fp = build_flow_paths(rt, pat, "min")
+    a = fp.device_arrays()
+    assert fp.device_arrays() is a  # bisection probes reuse the transfer
