@@ -1,26 +1,49 @@
-"""Fig. 10: PolarFly size scaling q in {13, 19, 25, 31} under uniform."""
+"""Fig. 10: size scaling under uniform traffic, batched fluid engine.
+
+PolarFly q in {13 .. 43} (the vectorized path engine and in-jit bisection
+make q > 31 affordable), plus Slim Fly and PolarStar comparison points at
+their native radixes in the radix-32..41 class that PF(31)/PF(37) occupy:
+
+  SF(23)     1058 routers, radix 35
+  SF(27)     1458 routers, radix 41
+  PS(7, 49)  2793 routers, radix 32  (PolarStar's scale edge at equal radix)
+"""
+from repro.core import topologies as tp
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
 from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
 
-from .common import emit, timed
+from .common import emit, fw_iters, smoke, timed
+
+
+def _configs():
+    for q in (7,) if smoke() else (13, 19, 25, 31, 37, 43):
+        pf = build_polarfly(q)
+        yield f"pf{q}", pf.graph, pf, (q + 1) // 2
+    if smoke():
+        return
+    for name, g in (("sf23", tp.build_slimfly(23)),
+                    ("sf27", tp.build_slimfly(27)),
+                    ("ps7x49", tp.build_polarstar(7, 49))):
+        yield name, g, None, g.params["radix"] // 2
 
 
 def run():
-    for q in (13, 19, 25, 31):
-        pf = build_polarfly(q)
-        rt = build_routing(pf.graph, pf)
-        p = (q + 1) // 2
+    for name, g, pf, p in _configs():
+        rt = build_routing(g, pf)
         for mode in ("min", "ugal_pf"):
-            # exact all-pairs for min (single path per flow); sampled for
-            # the adaptive mode (memory: F x K x L edge ids)
-            mf = 1_200_000 if mode == "min" else 150_000
+            # exact all-pairs for min (single path per flow) up to the
+            # PF(43)/SF(27) sizes; PS(7,49) (7.8M pairs) and the adaptive
+            # mode sample (memory: F x K x L edge ids)
+            mf = 3_600_000 if mode == "min" else 150_000
             pat = make_pattern("uniform", rt, p=p, seed=0, max_flows=mf)
             fp, pus = timed(lambda: build_flow_paths(
                 rt, pat, mode, k_candidates=8, seed=0))
-            emit(f"fig10.pf{q}.{mode}.paths", pus, f"F={pat.num_flows}")
-            sat, us = timed(lambda: saturation_throughput(fp, tol=0.02))
-            emit(f"fig10.pf{q}.{mode}", us, f"N={pf.n};sat={sat:.3f}")
+            emit(f"fig10.{name}.{mode}.paths", pus, f"F={pat.num_flows}")
+            sat, us = timed(lambda: saturation_throughput(
+                fp, tol=0.02, iters=fw_iters(mode), engine="batched"))
+            emit(f"fig10.{name}.{mode}", us,
+                 f"N={g.n};radix={g.params.get('radix', '?')};sat={sat:.3f}")
 
 
 if __name__ == "__main__":

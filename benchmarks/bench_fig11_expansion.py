@@ -1,32 +1,36 @@
-"""Fig. 11: incremental expansion, quadric vs non-quadric replication."""
+"""Fig. 11: incremental expansion, quadric vs non-quadric replication
+(saturation via the batched fluid engine)."""
 from repro.core.expansion import expand
 from repro.core.layout import build_layout
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
 from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
 
-from .common import emit, timed
+from .common import emit, fw_iters, smoke, timed
 
 
 def run():
-    q = 13
+    q = 7 if smoke() else 13
     pf = build_polarfly(q)
     lay = build_layout(pf)
     base_rt = build_routing(pf.graph, pf)
     base_pat = make_pattern("uniform", base_rt, p=(q + 1) // 2, seed=0)
     fp, pus = timed(lambda: build_flow_paths(base_rt, base_pat, "ugal_pf",
                                              k_candidates=8, seed=0))
-    emit("fig11.base.pf13.paths", pus, f"F={base_pat.num_flows}")
-    base_sat = saturation_throughput(fp, tol=0.02)
-    emit("fig11.base.pf13", 0.0, f"N={pf.n};sat={base_sat:.3f}")
+    emit(f"fig11.base.pf{q}.paths", pus, f"F={base_pat.num_flows}")
+    base_sat = saturation_throughput(fp, tol=0.02, iters=fw_iters("ugal_pf"),
+                                     engine="batched")
+    emit(f"fig11.base.pf{q}", 0.0, f"N={pf.n};sat={base_sat:.3f}")
     for method in ("quadric", "nonquadric"):
-        for steps in (2, 4):
+        for steps in (2,) if smoke() else (2, 4):
             def do():
                 st = expand(lay, steps, method)
                 rt = build_routing(st.graph)
                 pat = make_pattern("uniform", rt, p=(q + 1) // 2, seed=0)
                 fpx = build_flow_paths(rt, pat, "ugal_pf", k_candidates=8, seed=0)
-                return st.graph.n, saturation_throughput(fpx, tol=0.02)
+                return st.graph.n, saturation_throughput(
+                    fpx, tol=0.02, iters=fw_iters("ugal_pf"),
+                    engine="batched")
             (n, sat), us = timed(do)
             growth = 100 * (n - pf.n) / pf.n
             emit(f"fig11.{method}.x{steps}", us,

@@ -1,6 +1,7 @@
 """Fig. 8 / Table V: saturation throughput across topologies x patterns x
 routing.  Scaled configuration (q=13-class, ~200 routers, p:radix = 1:2) --
-the paper's own Fig. 10 shows PolarFly behavior is size-stable."""
+the paper's own Fig. 10 shows PolarFly behavior is size-stable.  Saturation
+runs on the batched (in-jit bisection) fluid engine."""
 import numpy as np
 
 from repro.core import topologies as tp
@@ -8,7 +9,7 @@ from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
 from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
 
-from .common import emit, timed
+from .common import emit, fw_iters, smoke, timed
 
 CONFIGS = {
     "PF": lambda: (build_polarfly(13).graph, build_polarfly(13)),
@@ -18,15 +19,22 @@ CONFIGS = {
     "FT": lambda: (tp.build_fat_tree(8, 3), None),      # 192 switches
 }
 
+SMOKE_CONFIGS = {
+    "PF": lambda: (build_polarfly(7).graph, build_polarfly(7)),
+    "DF1": lambda: (tp.build_dragonfly(4, 2), None),
+}
+
 
 def run():
-    for name, factory in CONFIGS.items():
+    configs = SMOKE_CONFIGS if smoke() else CONFIGS
+    patterns = ("uniform",) if smoke() else ("uniform", "random_perm")
+    for name, factory in configs.items():
         g, pf = factory()
         rt = build_routing(g, pf)
         hosts = (np.arange(g.params["leaf_switches"], dtype=np.int32)
                  if name == "FT" else None)
         p = max(2, g.params.get("radix", 8) // 2)
-        for pattern in ("uniform", "random_perm"):
+        for pattern in patterns:
             pat = make_pattern(pattern, rt, p=p, hosts=hosts, seed=0)
             modes = ["ecmp"] if name == "FT" else ["min", "ugal", "ugal_pf"]
             for mode in modes:
@@ -34,7 +42,8 @@ def run():
                     rt, pat, mode, k_candidates=10, seed=0))
                 emit(f"fig8.{name}.{pattern}.{mode}.paths", pus,
                      f"F={pat.num_flows}")
-                sat, us = timed(lambda: saturation_throughput(fp, tol=0.01))
+                sat, us = timed(lambda: saturation_throughput(
+                    fp, tol=0.01, iters=fw_iters(mode), engine="batched"))
                 emit(f"fig8.{name}.{pattern}.{mode}", us, f"sat={sat:.3f}")
 
 

@@ -1,0 +1,65 @@
+"""Batched vs scalar fluid-solver engines -- the acceptance microbenchmark
+for the in-jit warm-started saturation bisection (tentpole of the batched
+solver PR).
+
+Sweep: PF(13) adaptive modes (UGAL / UGAL_PF) on the Fig. 8/9 adversarial
+patterns (random_perm, tornado) at convergence-grade iters, where the two
+engines agree on the saturation (see fluid.py docstring).  Asserts >= 3x
+aggregate wall-clock unless BENCH_SMOKE=1, plus a vmapped latency-curve
+comparison."""
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import (build_flow_paths, evaluate_load, latency_curve,
+                              make_pattern, saturation_throughput)
+
+from .common import emit, smoke, timed
+
+ITERS = 2000
+TOL = 0.005
+
+
+def run():
+    q = 7 if smoke() else 13
+    pf = build_polarfly(q)
+    rt = build_routing(pf.graph, pf)
+    p = (q + 1) // 2
+    total_scalar = total_batched = 0.0
+    for pattern in ("random_perm", "tornado"):
+        pat = make_pattern(pattern, rt, p=p, seed=0)
+        for mode in ("ugal", "ugal_pf"):
+            fp = build_flow_paths(rt, pat, mode, k_candidates=8, seed=0)
+            # compile both engines outside the timed region
+            evaluate_load(fp, 0.5, iters=ITERS)
+            saturation_throughput(fp, tol=TOL, iters=ITERS, engine="batched")
+            sat_s, us_s = timed(lambda: saturation_throughput(
+                fp, tol=TOL, iters=ITERS, engine="scalar"))
+            sat_b, us_b = timed(lambda: saturation_throughput(
+                fp, tol=TOL, iters=ITERS, engine="batched"))
+            total_scalar += us_s
+            total_batched += us_b
+            emit(f"fluid.pf{q}.{pattern}.{mode}.batched", us_b,
+                 f"sat={sat_b:.3f};speedup={us_s / us_b:.1f}x")
+            emit(f"fluid.pf{q}.{pattern}.{mode}.scalar", us_s,
+                 f"sat={sat_s:.3f}")
+
+    # latency sweep: one vmapped call vs per-load dispatch
+    pat = make_pattern("random_perm", rt, p=p, seed=0)
+    fp = build_flow_paths(rt, pat, "ugal_pf", k_candidates=8, seed=0)
+    loads = [0.1 * i for i in range(1, 10)]
+    latency_curve(fp, loads, engine="batched")
+    evaluate_load(fp, 0.5)
+    _, us_b = timed(lambda: latency_curve(fp, loads, engine="batched"))
+    _, us_s = timed(lambda: latency_curve(fp, loads, engine="scalar"))
+    emit(f"fluid.pf{q}.latency_curve.batched", us_b,
+         f"P={len(loads)};speedup={us_s / us_b:.1f}x")
+
+    speedup = total_scalar / total_batched
+    emit(f"fluid.pf{q}.saturation.total", total_batched,
+         f"speedup={speedup:.1f}x")
+    if not smoke():
+        assert speedup >= 3.0, \
+            f"batched saturation sweep speedup {speedup:.1f}x < 3x"
+
+
+if __name__ == "__main__":
+    run()

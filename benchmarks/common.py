@@ -6,17 +6,42 @@ paper-relevant quantity (saturation, fraction, count, ...).
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable
 
 
 def timed(fn: Callable, repeats: int = 1):
+    """Wall-clock `fn`, synchronizing device outputs before reading the
+    clock: JAX dispatches asynchronously, so without blocking on the result
+    the timer can stop while device work is still in flight.  Non-array
+    outputs pass through `jax.block_until_ready` untouched.  (jax is
+    imported lazily so the pure-numpy benches skip the import cost.)"""
+    import jax
+
     t0 = time.perf_counter()
     out = None
     for _ in range(repeats):
-        out = fn()
+        out = jax.block_until_ready(fn())
     dt = (time.perf_counter() - t0) / repeats
     return out, dt * 1e6
+
+
+# Adaptive (UGAL / UGAL_PF) saturations need convergence-grade Frank-Wolfe
+# budgets -- see the truncation-noise discussion in repro/simulation/fluid.py;
+# oblivious splits are load-independent, so the solver default suffices.
+ADAPTIVE_ITERS = 1500
+
+
+def fw_iters(mode: str) -> int:
+    """Frank-Wolfe iteration budget for a routing mode's saturation solve."""
+    return ADAPTIVE_ITERS if mode in ("ugal", "ugal_pf") else 250
+
+
+def smoke() -> bool:
+    """True when BENCH_SMOKE=1: benchmarks shrink to PF(7)-scale configs so
+    CI can smoke-test every figure in minutes."""
+    return os.environ.get("BENCH_SMOKE", "0") not in ("", "0")
 
 
 def emit(name: str, us: float, derived) -> None:

@@ -10,6 +10,7 @@ BENCHES = [
     "bench_table2_triangles",
     "bench_table6_diversity",
     "bench_paths_engine",
+    "bench_fluid_engine",
     "bench_fig8_saturation",
     "bench_fig9_adaptive",
     "bench_fig10_sizes",

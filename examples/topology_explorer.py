@@ -26,8 +26,11 @@ def main():
         adv = make_pattern("random_perm", rt, p=p, seed=0)
         s_uni = saturation_throughput(build_flow_paths(rt, uni, "min"), tol=0.02)
         s_adv = saturation_throughput(build_flow_paths(rt, adv, "min"), tol=0.02)
+        # convergence-grade iters for the adaptive equilibrium (see
+        # fluid.py docstring on truncation noise)
         s_ug = saturation_throughput(
-            build_flow_paths(rt, adv, "ugal", k_candidates=10), tol=0.02)
+            build_flow_paths(rt, adv, "ugal", k_candidates=10), tol=0.02,
+            iters=1500)
         bis = bisection_fraction(g)
         res = resilience_sweep(g, [0.2], seed=0)[0].diameter
         print(f"{name:20s} {g.n:5d} {g.params.get('radix','?'):>5} "

@@ -20,6 +20,8 @@ __all__ = [
     "build_hyperx",
     "build_fat_tree",
     "build_jellyfish",
+    "build_paley",
+    "build_polarstar",
     "paper_table5_configs",
 ]
 
@@ -169,6 +171,84 @@ def build_fat_tree(k: int, n_levels: int = 3) -> Graph:
     g = b.freeze()
     g.params.update({"k": k, "levels": n_levels, "radix": 2 * k,
                      "hosts": k ** n_levels, "leaf_switches": per_level})
+    return g
+
+
+# ----------------------------------------------------------------------------
+# PolarStar (Lakhotia et al. 2023): star product ER_q * Paley(qj), diameter 3
+# ----------------------------------------------------------------------------
+
+def build_paley(q: int) -> Graph:
+    """Paley graph QR(q): vertices GF(q), x ~ y iff x - y is a nonzero
+    square.  Requires a prime power q = 1 (mod 4) so that -1 is a square and
+    adjacency is symmetric.  (q-1)/2-regular, diameter 2, self-complementary:
+    x -> nu*x for any non-residue nu maps the graph onto its complement --
+    the property the PolarStar star product leans on."""
+    if not is_prime_power(q) or q % 4 != 1:
+        raise ValueError("Paley graph needs a prime power q = 1 (mod 4)")
+    gf = GF(q)
+    b = GraphBuilder(f"Paley({q})", q)
+    residues = np.where(gf.squares)[0].astype(np.int32)
+    for x in range(q):
+        for s in residues:
+            y = int(gf.add(np.int32(x), s))
+            if x < y:
+                b.add_edge(x, y)
+    g = b.freeze()
+    g.params.update({"q": q, "radix": (q - 1) // 2})
+    return g
+
+
+def build_polarstar(q: int, qj: int) -> Graph:
+    """PolarStar-flavored star product PS(q, qj) = ER_q * Paley(qj): the
+    diameter-3 topology of "PolarStar: Expanding the Scalability Horizon of
+    Diameter-3 Networks" with the Paley join graph.
+
+    Supernodes are the N_s = q^2+q+1 vertices of the polarity graph ER_q
+    (the PolarFly structure graph); each holds a copy of the Paley(qj) join
+    graph.  Every ER edge {u, v} (oriented u < v) contributes the perfect
+    matching (u, x) ~ (v, nu * x) for one fixed quadratic non-residue nu of
+    GF(qj) -- the Paley complement isomorphism.
+
+    Diameter 3: inside a supernode, and across one ER edge, the Paley copy
+    finishes in <= 2 extra hops (Paley has diameter 2).  For supernodes at
+    ER distance 2 (unique common neighbor w), writing sigma(x) = nu * x and
+    QR / NQR for the (non-)residue sets, the three <= 3-hop shapes
+    cross-cross-intra, cross-intra-cross and intra-cross-cross from (u, x)
+    reach sigma^2(x) + QR, sigma(N[sigma(x)]) = sigma^2(x) + NQR and
+    sigma^2(N[x]) = sigma^2(x) + NQR in supernode v -- together all of
+    GF(qj), precisely because nu is a non-residue.  (Per-edge random
+    multipliers break this whenever a 2-path composes two residue
+    multipliers; identity matchings always fail it.)  Verified empirically
+    by tests/test_metrics.py::test_polarstar_diameter_3.
+
+    N = (q^2+q+1) * qj at radix q + 1 + (qj-1)/2 -- e.g. PS(7, 49) packs
+    2793 routers at radix 32 where PolarFly PF(31) packs 993.  Vertices in
+    the q+1 quadric supernodes have one port fewer (ER self-loops are not
+    replicated; the diameter bound above never uses them).
+    """
+    from .polarfly import build_polarfly
+
+    gj = build_paley(qj)
+    gf = GF(qj)
+    nu = next(x for x in range(1, qj) if not gf.squares[x])
+    pf = build_polarfly(q)
+    gs = pf.graph
+    b = GraphBuilder(f"PS({q},{qj})", gs.n * qj)
+
+    def vid(u: int, x: int) -> int:
+        return u * qj + x
+
+    for u in range(gs.n):  # intra-supernode join-graph copies
+        for x, y in gj.edge_list:
+            b.add_edge(vid(u, int(x)), vid(u, int(y)))
+    sigma = [int(gf.mul(np.int32(nu), np.int32(x))) for x in range(qj)]
+    for u, v in gs.edge_list:  # cross matchings (u, x) ~ (v, sigma(x))
+        for x in range(qj):
+            b.add_edge(vid(int(u), x), vid(int(v), sigma[x]))
+    g = b.freeze()
+    g.params.update({"q": q, "qj": qj, "supernodes": gs.n,
+                     "radix": q + 1 + (qj - 1) // 2})
     return g
 
 

@@ -19,6 +19,39 @@ Oblivious modes: `min` puts everything on the unique minimal path;
 Outputs: per-link utilization, accepted throughput (saturation = largest
 offered load with max utilization <= 1), and mean latency in cycles
 (1 cycle router pipeline per hop + queueing delay).
+
+Two solver engines share one Frank-Wolfe core (`_fw_pieces`):
+
+  * ``engine="batched"`` (default) -- the whole load sweep runs inside a
+    single jit.  `latency_curve` vmaps the equilibrium over the vector of
+    offered loads, so a P-point sweep is one compiled call instead of P
+    re-entries (identical per-load math; only the XLA fusion barriers are
+    dropped, see `_fw_pieces`).  `saturation_throughput` runs its bisection
+    as an in-jit unrolled probe loop (ceil(log2(1/tol)) probes, the scalar
+    bisection's probe sequence), with each probe's Frank-Wolfe split
+    warm-started from the previous probe's equilibrium: the Wardrop fixed
+    point does not depend on the starting split, so warm probes re-converge
+    in a fraction of `iters` steps (`_probe_schedule`: iters/2 for the
+    first half-range jump, iters/4 for the next four, iters/8 for the
+    fine tail).
+  * ``engine="scalar"`` -- the original per-probe dispatch (one `_solve`
+    call per offered load, every probe cold-started from scratch); kept as
+    the executable reference, the same two-engine pattern the path
+    builders use (`build_flow_paths`).
+
+Equivalence (tests/test_simulation.py): oblivious modes (min / ecmp /
+valiant / cvaliant) have load-independent splits, so batched probes are
+exact replicas of scalar probes and saturations agree within any `tol`;
+latency-curve entries match per-load `evaluate_load` within 1e-3 relative
+in every mode.  Adaptive modes (UGAL / UGAL_PF) carry intrinsic O(1/iters)
+truncation noise -- near saturation the adaptation gate flattens
+max-utilization to ~0.98 over a wide load range, so the feasibility
+boundary of a *truncated* Frank-Wolfe run keeps drifting with the
+iteration budget (e.g. PF(13) random-perm UGAL_PF saturation moves 0.41 ->
+0.47 between iters=250 and 2000).  Warm-started probes follow a different
+truncation trajectory than cold-started ones, so the engines agree only as
+tightly as the solves are converged: within `tol` = 0.05 at iters >= 3000
+on PF(13) adversarial patterns, and asymptotically as iters grows.
 """
 
 from __future__ import annotations
@@ -39,6 +72,10 @@ __all__ = ["FluidResult", "evaluate_load", "saturation_throughput", "latency_cur
 _EPS = 1e-6
 _RHO_CAP = 0.999
 _BUF_PACKETS = 32.0  # 128-flit input buffers, 4-flit packets (paper §VIII-A)
+# Warm-started probes resume the step-size schedule at this t: the first
+# warm step moves 2/(t+2) = 1/3 of the way to the current best response,
+# instead of gamma(0) = 1 which would discard the carried split entirely.
+_WARM_T0 = 4.0
 
 
 @dataclass
@@ -56,12 +93,19 @@ def _queue_delay(rho: jnp.ndarray) -> jnp.ndarray:
     return r / (2.0 * (1.0 - r))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("loads_kind", "num_links", "mode",
-                                    "iters"))
-def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
-           num_links: int, mode: str, offered: float, iters: int = 250):
-    """Returns (split [F,K], rho [E], cost [F,K]).
+def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+               num_links: int, mode: str, barrier: bool = True):
+    """Shared Frank-Wolfe building blocks, traced inside each jitted entry.
+
+    Returns (init_split, equilibrate, loads, cost_of):
+
+      init_split        [F, K] mode-dependent starting split.
+      equilibrate(split0, demand, iters, t0)
+                        `iters` Frank-Wolfe steps from `split0` using step
+                        sizes 2/(t+2) for t = t0, t0+1, ...; identity for
+                        oblivious modes (their split is the fixed point).
+      loads(split, demand) -> rho [E]
+      cost_of(rho)      -> per-candidate path cost [F, K]
 
     Link loads use the incidence structure from `FlowPaths.device_arrays`:
     a padded per-edge gather matrix in the common case (XLA:CPU serializes
@@ -69,22 +113,24 @@ def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
     Frank-Wolfe iteration at ~1e-4 relative float32 rounding), or plain
     scatter-add for pathologically skewed incidence counts.  The
     optimization barriers keep XLA from fusing the weight / delay tables
-    into their consuming gathers, which would serialize them.
+    into their consuming gathers, which would serialize them; `barrier=False`
+    drops them (JAX 0.4.37 has no vmap batching rule for
+    `optimization_barrier`, so the vmapped batch solver cannot use them).
     """
-    demand = demand * offered  # [F]
-
     minvec = jnp.where(is_min, 1.0, 0.0)
     nmin = jnp.maximum(minvec.sum(axis=1, keepdims=True), 1)
     minvec = minvec / nmin
     uniform = valid / jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
     has_alt = (valid & ~is_min).any(axis=1)
 
-    def loads(split):
+    def _barrier(x):
+        return jax.lax.optimization_barrier(x) if barrier else x
+
+    def loads(split, demand):
         w = (split * demand[:, None]).reshape(-1)  # [F*K]
         if loads_kind == "pad":
             (inc,) = loads_arrays
-            w = jax.lax.optimization_barrier(
-                jnp.concatenate([w, jnp.zeros(1)]))
+            w = _barrier(jnp.concatenate([w, jnp.zeros(1)]))
             return w[inc].sum(axis=1)  # [E]
         # "scatter" fallback for pathologically skewed incidence counts:
         # slower, but rounding stays proportional to each edge's own load
@@ -95,41 +141,145 @@ def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
 
     def cost_of(rho):
         delay = 1.0 + _queue_delay(rho)
-        d = jax.lax.optimization_barrier(
-            jnp.concatenate([delay, jnp.zeros(1)]))  # pad slot
+        d = _barrier(jnp.concatenate([delay, jnp.zeros(1)]))  # pad slot
         return d[eidx].sum(-1)  # [F,K]
 
-    def body(split, t):
-        rho = loads(split)
-        cost = jnp.where(valid, cost_of(rho), jnp.inf)
-        target = jax.nn.one_hot(jnp.argmin(cost, axis=1), split.shape[1])
-        if mode == "ugal_pf":
-            # the 2/3 local-occupancy adaptation threshold (paper §VII-C):
-            # occupancy is of the 128-flit (32-packet) output buffer, whose
-            # M/D/1 mean queue length only crosses 2/3 near rho ~ 0.98
-            qlen = _queue_delay(rho[first_edge]) * rho[first_edge]  # Little's law
-            gate = jnp.clip((qlen / _BUF_PACKETS - 2.0 / 3.0) * 8.0, 0.0, 1.0)
-            gate = jnp.where(has_alt, gate, 0.0)
-            target = gate[:, None] * target + (1 - gate)[:, None] * minvec
-        gamma = 2.0 / (t + 2.0)
-        return (1 - gamma) * split + gamma * target, None
+    def equilibrate(split0, demand, iters: int, t0: float = 0.0):
+        if mode not in ("ugal", "ugal_pf"):
+            return split0
 
-    if mode == "min":
-        split = minvec
-    elif mode in ("ecmp", "valiant", "cvaliant"):
-        split = uniform
-    else:
-        split, _ = jax.lax.scan(body, minvec,
-                                jnp.arange(iters, dtype=jnp.float32))
-    rho = loads(split)
+        def body(split, t):
+            rho = loads(split, demand)
+            cost = jnp.where(valid, cost_of(rho), jnp.inf)
+            target = jax.nn.one_hot(jnp.argmin(cost, axis=1), split.shape[1])
+            if mode == "ugal_pf":
+                # the 2/3 local-occupancy adaptation threshold (paper
+                # §VII-C): occupancy is of the 128-flit (32-packet) output
+                # buffer, whose M/D/1 mean queue length only crosses 2/3
+                # near rho ~ 0.98
+                qlen = _queue_delay(rho[first_edge]) * rho[first_edge]  # Little
+                gate = jnp.clip((qlen / _BUF_PACKETS - 2.0 / 3.0) * 8.0,
+                                0.0, 1.0)
+                gate = jnp.where(has_alt, gate, 0.0)
+                target = gate[:, None] * target + (1 - gate)[:, None] * minvec
+            gamma = 2.0 / (t + 2.0)
+            return (1 - gamma) * split + gamma * target, None
+
+        split, _ = jax.lax.scan(
+            body, split0, t0 + jnp.arange(iters, dtype=jnp.float32))
+        return split
+
+    init = minvec if mode in ("min", "ugal", "ugal_pf") else uniform
+    return init, equilibrate, loads, cost_of
+
+
+def _max_util(rho, num_links: int):
+    return jnp.max(rho) if num_links else jnp.zeros((), jnp.float32)
+
+
+def _metrics(split, rho, cost, valid, hops, demand, offered, num_links: int):
+    """In-jit FluidResult fields: (accepted, max_util, mean_latency,
+    mean_hops) -- same formulas `evaluate_load` applies on the host."""
+    max_util = _max_util(rho, num_links)
+    d = demand * offered
+    dsum = jnp.maximum(d.sum(), _EPS)
+    wsum = (split * jnp.where(valid, cost, 0.0)).sum(axis=1)
+    lat = (d * wsum).sum() / dsum
+    hop = (d * (split * hops).sum(axis=1)).sum() / dsum
+    accepted = offered * jnp.minimum(1.0, 1.0 / jnp.maximum(max_util, _EPS))
+    return accepted, max_util, lat, hop
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "iters"))
+def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
+           num_links: int, mode: str, offered: float, iters: int = 250):
+    """Single-load reference solve: (split [F,K], rho [E], cost [F,K])."""
+    init, equilibrate, loads, cost_of = _fw_pieces(
+        eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+        num_links, mode)
+    demand = demand * offered  # [F]
+    split = equilibrate(init, demand, iters)
+    rho = loads(split, demand)
     return split, rho, cost_of(rho)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "iters"))
+def _solve_batch(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+                 demand, hops, num_links: int, mode: str, offered_vec,
+                 iters: int = 250):
+    """vmap of the cold-start equilibrium over a vector of offered loads;
+    one compiled call evaluates the whole latency sweep."""
+    init, equilibrate, loads, cost_of = _fw_pieces(
+        eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+        num_links, mode, barrier=False)
+
+    def one(offered):
+        d = demand * offered
+        split = equilibrate(init, d, iters)
+        rho = loads(split, d)
+        return _metrics(split, rho, cost_of(rho), valid, hops, demand,
+                        offered, num_links)
+
+    return jax.vmap(one)(offered_vec)
+
+
+def _probe_schedule(iters: int, probes: int) -> tuple:
+    """Per-probe Frank-Wolfe step budgets for the warm-started bisection.
+
+    The first probe jumps half the load range away from the carried
+    equilibrium and gets iters/2 steps to re-converge; the next four move
+    geometrically less and start warm, so iters/4 suffices; probes beyond
+    the fifth refine within 1/64 of the range from an almost-converged
+    split and get iters/8.  Total probe work for the default tol=0.005
+    (8 probes) is 1.875 * iters versus the scalar engine's 8 * iters.
+    """
+    sched = ([max(1, iters // 2)] + [max(1, iters // 4)] * 4
+             + [max(1, iters // 8)] * max(0, probes - 5))
+    return tuple(sched[:probes])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "iters", "probe_schedule"))
+def _saturation_batch(eidx, loads_arrays, loads_kind, valid, is_min,
+                      first_edge, demand, num_links: int, mode: str,
+                      iters: int, probe_schedule: tuple):
+    """In-jit saturation bisection with warm-started Frank-Wolfe probes.
+
+    Probe sequence mirrors the scalar engine: a fully converged solve at
+    offered = 1.0 (early accept when feasible), then one bisection step per
+    `probe_schedule` entry over [0, 1].  Each probe re-equilibrates from
+    the previous probe's split with that entry's step count, resuming the
+    step-size schedule at `_WARM_T0` (the probes are unrolled, so each gets
+    its own static trip count).
+    """
+    init, equilibrate, loads, _ = _fw_pieces(
+        eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+        num_links, mode)
+    split = equilibrate(init, demand, iters)  # offered = 1.0
+    max1 = _max_util(loads(split, demand), num_links)
+
+    lo = jnp.zeros((), jnp.float32)
+    hi = jnp.ones((), jnp.float32)
+    for probe_iters in probe_schedule:
+        mid = 0.5 * (lo + hi)
+        d = demand * mid
+        split = equilibrate(split, d, probe_iters, t0=_WARM_T0)
+        feasible = _max_util(loads(split, d), num_links) <= 1.0
+        lo = jnp.where(feasible, mid, lo)
+        hi = jnp.where(feasible, hi, mid)
+    return jnp.where(max1 <= 1.0, jnp.ones((), jnp.float32), lo)
 
 
 def _run(fp: FlowPaths, offered: float, iters: int):
     # device_arrays() is cached on the FlowPaths, so the repeated probes of
     # saturation bisection / latency sweeps skip the preprocessing and the
     # host->device copies.
-    eidx, loads_rep, valid, is_min, first_edge, demand = fp.device_arrays()
+    eidx, loads_rep, valid, is_min, first_edge, demand, _ = fp.device_arrays()
     return _solve(eidx, loads_rep[1:], loads_rep[0], valid, is_min,
                   first_edge, demand, fp.num_links, fp.mode, float(offered),
                   iters)
@@ -151,9 +301,28 @@ def evaluate_load(fp: FlowPaths, offered: float, iters: int = 250) -> FluidResul
 
 
 def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
-                          iters: int = 250) -> float:
+                          iters: int = 250, engine: str = "batched",
+                          probe_iters: int = 0) -> float:
     """Largest per-endpoint offered load with max link utilization <= 1
-    (bisection; adaptive splits re-equilibrate at every probe)."""
+    (bisection; adaptive splits re-equilibrate at every probe).
+
+    engine="batched" (default) runs the whole bisection inside one jit with
+    warm-started probes; engine="scalar" is the per-probe reference.
+    `probe_iters` (batched only) fixes every warm probe's Frank-Wolfe step
+    count; 0 picks the default front-loaded schedule (`_probe_schedule`).
+    """
+    if engine == "batched":
+        probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
+        sched = ((probe_iters,) * probes if probe_iters > 0
+                 else _probe_schedule(iters, probes))
+        eidx, loads_rep, valid, is_min, first_edge, demand, _ = \
+            fp.device_arrays()
+        sat = _saturation_batch(eidx, loads_rep[1:], loads_rep[0], valid,
+                                is_min, first_edge, demand, fp.num_links,
+                                fp.mode, iters, sched)
+        return float(sat)
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}")
     if evaluate_load(fp, 1.0, iters).max_util <= 1.0:
         return 1.0
     lo, hi = 0.0, 1.0
@@ -166,5 +335,24 @@ def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
     return lo
 
 
-def latency_curve(fp: FlowPaths, loads, iters: int = 250) -> List[FluidResult]:
-    return [evaluate_load(fp, float(l), iters) for l in loads]
+def latency_curve(fp: FlowPaths, loads, iters: int = 250,
+                  engine: str = "batched") -> List[FluidResult]:
+    """FluidResult per offered load.  engine="batched" (default) evaluates
+    every load in one compiled vmapped call; engine="scalar" dispatches
+    `evaluate_load` per load (the reference)."""
+    loads = [float(l) for l in loads]
+    if engine == "batched":
+        eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
+            fp.device_arrays()
+        acc, mx, lat, hop = _solve_batch(
+            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
+            demand, hops, fp.num_links, fp.mode,
+            jnp.asarray(np.asarray(loads, dtype=np.float32)), iters)
+        return [FluidResult(offered=l, accepted=float(a), max_util=float(m),
+                            mean_latency=float(la), mean_hops=float(h))
+                for l, a, m, la, h in zip(loads, np.asarray(acc),
+                                          np.asarray(mx), np.asarray(lat),
+                                          np.asarray(hop))]
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}")
+    return [evaluate_load(fp, l, iters) for l in loads]

@@ -120,7 +120,7 @@ class FlowPaths:
         so repeated solver calls (bisection probes, latency sweeps) skip both
         the host-side preprocessing and the host->device copies.
 
-        Returns (eidx, loads_rep, valid, is_min, first_edge, demand):
+        Returns (eidx, loads_rep, valid, is_min, first_edge, demand, hops):
 
           eidx      [F, K, L] int32 -- edge ids with -1 pads remapped to
                     `num_links`, so gathers from a length num_links+1 table
@@ -135,6 +135,8 @@ class FlowPaths:
                     those cases are small, so scatter speed doesn't matter,
                     and scatter keeps float32 rounding proportional to each
                     edge's own load rather than a global prefix sum).
+          hops      [F, K] int32 per-candidate hop counts (batched engine
+                    computes mean hops in-jit).
         """
         if self._device is None:
             import jax.numpy as jnp
@@ -160,7 +162,8 @@ class FlowPaths:
                             jnp.asarray(self.valid),
                             jnp.asarray(self.is_min),
                             jnp.asarray(self.first_edge),
-                            jnp.asarray(self.pattern.demand))
+                            jnp.asarray(self.pattern.demand),
+                            jnp.asarray(self.hops))
         return self._device
 
 

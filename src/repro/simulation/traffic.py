@@ -72,8 +72,14 @@ def uniform(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None,
         f = max_flows
         si = rng.integers(nh, size=f)
         di = (si + 1 + rng.integers(nh - 1, size=f)) % nh
+        # aggregate duplicate (src, dst) draws into one flow each: the
+        # solver's padded incidence table indexes candidate slots per flow,
+        # so a pair drawn twice would double-count its slots; summing the
+        # multiplicity into the demand keeps the aggregate at p * nh exactly
+        pair, counts = np.unique(si * np.int64(nh) + di, return_counts=True)
+        si, di = pair // nh, pair % nh
         src, dst = h[si], h[di]
-        demand = np.full(f, p * nh / f, dtype=np.float32)
+        demand = (counts * (p * nh / f)).astype(np.float32)
     return TrafficPattern("uniform", src.astype(np.int32), dst.astype(np.int32),
                           demand, p)
 
@@ -111,25 +117,41 @@ def perm_khop(rt: RoutingTables, k: int, p: int = 16,
     cands = [np.where(dist[i] == k)[0] for i in range(nh)]
     match_of_dst = -np.ones(nh, dtype=np.int64)
 
-    def try_assign(i, visited):
-        for j in rng.permutation(cands[i]):
-            if not visited[j]:
+    def try_assign(i0, visited):
+        """Kuhn augmenting-path DFS with an explicit stack (augmenting
+        chains can reach depth nh, which would blow the C stack through
+        recursion at large nh).  Frames draw their candidate permutation on
+        push and claim one destination at a time, exactly mirroring the
+        recursive formulation's rng call order, so matchings are unchanged.
+        """
+        stack = [[int(i0), iter(rng.permutation(cands[int(i0)])), -1]]
+        while stack:
+            frame = stack[-1]
+            pushed = False
+            for j in frame[1]:
+                j = int(j)
+                if visited[j]:
+                    continue
                 visited[j] = True
-                if match_of_dst[j] < 0 or try_assign(int(match_of_dst[j]), visited):
-                    match_of_dst[j] = i
+                frame[2] = j
+                owner = int(match_of_dst[j])
+                if owner < 0:
+                    # free destination: the whole stack is an augmenting
+                    # path; reassign every frame's claimed destination
+                    for i, _, jj in stack:
+                        match_of_dst[jj] = i
                     return True
+                stack.append([owner, iter(rng.permutation(cands[owner])), -1])
+                pushed = True
+                break
+            if not pushed:
+                stack.pop()
         return False
 
-    import sys
-    old = sys.getrecursionlimit()
-    sys.setrecursionlimit(10000 + 10 * nh)
-    try:
-        for i in rng.permutation(nh):
-            visited = np.zeros(nh, dtype=bool)
-            if not try_assign(int(i), visited):
-                raise RuntimeError(f"no perfect {k}-hop permutation exists")
-    finally:
-        sys.setrecursionlimit(old)
+    for i in rng.permutation(nh):
+        visited = np.zeros(nh, dtype=bool)
+        if not try_assign(int(i), visited):
+            raise RuntimeError(f"no perfect {k}-hop permutation exists")
     perm = -np.ones(nh, dtype=np.int64)
     for j in range(nh):
         perm[int(match_of_dst[j])] = j

@@ -67,3 +67,34 @@ def test_resilience_disconnection_monotone():
     assert pts[1].diameter >= 2
     # paper: diameter jumps to <=4 with moderate failures but stays finite
     assert pts[2].diameter in (-1, 3, 4, 5) or pts[2].diameter >= 2
+
+
+def test_paley_graph():
+    """Paley(13): 6-regular, diameter 2, self-complementary edge count."""
+    g = tp.build_paley(13)
+    assert g.n == 13
+    assert (g.degrees == 6).all()
+    assert g.num_edges == 13 * 6 // 2
+    d = build_routing(g).dist
+    assert d.max() == 2
+    with pytest.raises(ValueError):
+        tp.build_paley(7)  # 7 = 3 (mod 4)
+
+
+@pytest.mark.parametrize("q,qj", [(5, 5), (5, 9), (7, 13)])
+def test_polarstar_diameter_3(q, qj):
+    """The star product ER_q * Paley(qj) with non-residue matchings has
+    diameter exactly 3 and N = (q^2+q+1) * qj at radix q+1+(qj-1)/2."""
+    g = tp.build_polarstar(q, qj)
+    n_super = q * q + q + 1
+    assert g.n == n_super * qj
+    assert g.params["radix"] == q + 1 + (qj - 1) // 2
+    deg = g.degrees
+    # quadric supernodes (no replicated self-loop) sit one port below radix
+    assert deg.max() == g.params["radix"]
+    assert deg.min() == g.params["radix"] - 1
+    assert (deg == deg.min()).sum() == (q + 1) * qj
+    rt = build_routing(g)
+    assert rt.diameter == 3
+    # PolarStar's point: much larger than PolarFly at comparable radix
+    assert g.n > 2 * n_super

@@ -1,5 +1,7 @@
 """§VIII fluid-simulator claims (scaled to q=7/13 for CPU speed) plus
-vectorized-vs-reference path-engine equivalence and speedup."""
+vectorized-vs-reference path-engine equivalence and speedup, and
+batched-vs-scalar fluid-engine equivalence."""
+import sys
 import time
 
 import numpy as np
@@ -8,7 +10,7 @@ import pytest
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
 from repro.simulation import (build_flow_paths, build_flow_paths_reference,
-                              evaluate_load, make_pattern,
+                              evaluate_load, latency_curve, make_pattern,
                               saturation_throughput)
 from repro.simulation.paths import build_directed_edges
 
@@ -70,6 +72,36 @@ def test_perm_khop_patterns():
         pat = make_pattern(f"perm{k}hop", rt, p=4, seed=1)
         d = rt.dist[pat.src, pat.dst]
         assert (d == k).all()
+
+
+def test_perm_khop_no_recursion(pf13):
+    """The Kuhn matching is iterative: a recursion limit far below the
+    worst-case augmenting-chain depth (nh = 183 here) must not matter, and
+    the interpreter limit must come back untouched."""
+    pf, rt = pf13
+    old = sys.getrecursionlimit()
+    sys.setrecursionlimit(100)
+    try:
+        pat = make_pattern("perm2hop", rt, p=7, seed=3)
+    finally:
+        sys.setrecursionlimit(old)
+    assert sys.getrecursionlimit() == old
+    assert (rt.dist[pat.src, pat.dst] == 2).all()
+
+
+def test_uniform_sampled_deduplicates(pf13):
+    """The sampled branch of traffic.uniform aggregates duplicate (src, dst)
+    draws into one flow (duplicates used to double-count incidence slots)
+    while conserving the aggregate demand p * nh."""
+    pf, rt = pf13
+    p = 7
+    pat = make_pattern("uniform", rt, p=p, seed=0, max_flows=5000)
+    assert pat.num_flows <= 5000
+    pair = pat.src.astype(np.int64) * pf.n + pat.dst
+    assert len(np.unique(pair)) == pat.num_flows
+    assert float(pat.demand.sum()) == pytest.approx(p * pf.n, rel=1e-5)
+    # multiplicity lands in demand: 5000 draws from 183*182 pairs collide
+    assert pat.num_flows < 5000 or pat.demand.max() > pat.demand.min()
 
 
 # ---------------------------------------------------------------------------
@@ -154,3 +186,87 @@ def test_device_arrays_cached(pf13):
     fp = build_flow_paths(rt, pat, "min")
     a = fp.device_arrays()
     assert fp.device_arrays() is a  # bisection probes reuse the transfer
+
+
+# ---------------------------------------------------------------------------
+# batched fluid engine vs the scalar reference (mirrors the path-engine suite)
+# ---------------------------------------------------------------------------
+
+OBLIVIOUS_MODES = ("min", "ecmp", "valiant", "cvaliant")
+
+
+@pytest.fixture(scope="module")
+def pf13_intact_and_damaged(pf13):
+    pf, rt = pf13
+    removed = pf.graph.edge_list[::11][:8]  # keeps the graph connected
+    damaged = pf.graph.subgraph_without_edges(removed)
+    rt_dmg = build_routing(damaged)
+    assert rt_dmg.diameter > rt.diameter  # damage actually stretches paths
+    return rt, rt_dmg
+
+
+def _rt(fixtures, which):
+    rt, rt_dmg = fixtures
+    return rt if which == "intact" else rt_dmg
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_batched_latency_curve_matches_scalar(pf13_intact_and_damaged, mode,
+                                              which):
+    """One vmapped call == per-load evaluate_load, within float32
+    reassociation noise (1e-3 relative), every mode, intact + damaged."""
+    rt = _rt(pf13_intact_and_damaged, which)
+    pat = make_pattern("random_perm", rt, p=7, seed=0)
+    fp = build_flow_paths(rt, pat, mode, k_candidates=6, seed=5)
+    loads = [0.1, 0.35, 0.7]
+    curve = latency_curve(fp, loads, engine="batched")
+    for l, rb in zip(loads, curve):
+        rs = evaluate_load(fp, l)
+        assert rb.offered == pytest.approx(rs.offered)
+        assert rb.max_util == pytest.approx(rs.max_util, rel=1e-3)
+        assert rb.accepted == pytest.approx(rs.accepted, rel=1e-3)
+        assert rb.mean_latency == pytest.approx(rs.mean_latency, rel=1e-3)
+        assert rb.mean_hops == pytest.approx(rs.mean_hops, rel=1e-3)
+
+
+@pytest.mark.parametrize("mode", OBLIVIOUS_MODES)
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_batched_saturation_matches_scalar_oblivious(pf13_intact_and_damaged,
+                                                     mode, which):
+    """Oblivious splits are load-independent, so the batched bisection
+    replicates the scalar probe sequence exactly: within tol at tight tol."""
+    rt = _rt(pf13_intact_and_damaged, which)
+    pat = make_pattern("random_perm", rt, p=7, seed=0)
+    fp = build_flow_paths(rt, pat, mode, k_candidates=6, seed=5)
+    tol = 0.005
+    sat_s = saturation_throughput(fp, tol=tol, engine="scalar")
+    sat_b = saturation_throughput(fp, tol=tol, engine="batched")
+    assert abs(sat_b - sat_s) <= tol + 1e-6
+
+
+@pytest.mark.parametrize("mode", ["ugal", "ugal_pf"])
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_batched_saturation_matches_scalar_adaptive(pf13_intact_and_damaged,
+                                                    mode, which):
+    """Adaptive-mode saturation carries O(1/iters) truncation noise (see
+    fluid.py docstring), so equivalence is asserted in the converged regime:
+    tol = 0.05 at iters = 3000 on the adversarial permutation pattern."""
+    rt = _rt(pf13_intact_and_damaged, which)
+    pat = make_pattern("random_perm", rt, p=7, seed=0)
+    fp = build_flow_paths(rt, pat, mode, k_candidates=6, seed=5)
+    tol = 0.05
+    sat_s = saturation_throughput(fp, tol=tol, iters=3000, engine="scalar")
+    sat_b = saturation_throughput(fp, tol=tol, iters=3000, engine="batched")
+    assert abs(sat_b - sat_s) <= tol + 1e-6
+
+
+def test_engine_rejects_unknown():
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("tornado", rt, p=4)
+    fp = build_flow_paths(rt, pat, "min")
+    with pytest.raises(ValueError, match="unknown engine"):
+        saturation_throughput(fp, engine="turbo")
+    with pytest.raises(ValueError, match="unknown engine"):
+        latency_curve(fp, [0.5], engine="turbo")
