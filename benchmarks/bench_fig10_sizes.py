@@ -7,43 +7,78 @@ their native radixes in the radix-32..41 class that PF(31)/PF(37) occupy:
   SF(23)     1058 routers, radix 35
   SF(27)     1458 routers, radix 41
   PS(7, 49)  2793 routers, radix 32  (PolarStar's scale edge at equal radix)
+
+BENCH_LARGE=1 adds the scale tier that only the sparse blocked-BFS graph
+engine can route (dense [n, n] frontier expansion is O(n^3) per hop):
+
+  PS(9, 61)  5551 routers, radix 40
+  SF(43)     3698 routers, radix 65
+  PF(79)     6321 routers, radix 80
+  JF(6321)   6321 routers, radix 80  (Jellyfish at PF(79)-matched radix)
+
+Under BENCH_SMOKE=1 the sweep shrinks to PF(7) plus one sparse-engine
+PS(7, 49) min-routing point (n = 2793 is above the dense-engine threshold,
+so `build_routing` auto-selects the blocked BFS), keeping the sparse path
+under CI coverage.  Adaptive points report the Frank-Wolfe truncation-error
+estimate (`fw_err`) alongside the saturation.
 """
 from repro.core import topologies as tp
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
-from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
+from repro.simulation import (build_flow_paths, make_pattern,
+                              saturation_throughput, truncation_error)
 
-from .common import emit, fw_iters, smoke, timed
+from .common import emit, fw_iters, large, smoke, timed
 
 
 def _configs():
+    """Yields (name, graph, pf, endpoints_per_router, modes)."""
     for q in (7,) if smoke() else (13, 19, 25, 31, 37, 43):
         pf = build_polarfly(q)
-        yield f"pf{q}", pf.graph, pf, (q + 1) // 2
+        yield f"pf{q}", pf.graph, pf, (q + 1) // 2, ("min", "ugal_pf")
     if smoke():
+        g = tp.build_polarstar(7, 49)
+        yield "ps7x49", g, None, g.params["radix"] // 2, ("min",)
         return
     for name, g in (("sf23", tp.build_slimfly(23)),
                     ("sf27", tp.build_slimfly(27)),
                     ("ps7x49", tp.build_polarstar(7, 49))):
-        yield name, g, None, g.params["radix"] // 2
+        yield name, g, None, g.params["radix"] // 2, ("min", "ugal_pf")
+    if large():
+        for name, g in (("ps9x61", tp.build_polarstar(9, 61)),
+                        ("sf43", tp.build_slimfly(43)),
+                        ("pf79", build_polarfly(79).graph),
+                        ("jf6321", tp.build_jellyfish(6321, 80, seed=0))):
+            yield name, g, None, g.params["radix"] // 2, ("min", "ugal_pf")
 
 
 def run():
-    for name, g, pf, p in _configs():
-        rt = build_routing(g, pf)
-        for mode in ("min", "ugal_pf"):
+    for name, g, pf, p, modes in _configs():
+        rt, rus = timed(lambda: build_routing(g, pf))
+        emit(f"fig10.{name}.routing", rus, f"N={g.n};diam={rt.diameter}")
+        for mode in modes:
             # exact all-pairs for min (single path per flow) up to the
-            # PF(43)/SF(27) sizes; PS(7,49) (7.8M pairs) and the adaptive
-            # mode sample (memory: F x K x L edge ids)
-            mf = 3_600_000 if mode == "min" else 150_000
+            # PF(43)/SF(27) sizes; larger graphs and the adaptive mode
+            # sample (memory: F x K x L edge ids).  Adaptive solves cost
+            # O(F * K * L) per Frank-Wolfe step at convergence-grade
+            # iteration budgets, so the scale tier halves the sample again.
+            mf = 3_600_000 if mode == "min" else \
+                (150_000 if g.n <= 3_000 else 60_000)
+            if smoke():
+                mf = min(mf, 200_000)
             pat = make_pattern("uniform", rt, p=p, seed=0, max_flows=mf)
             fp, pus = timed(lambda: build_flow_paths(
                 rt, pat, mode, k_candidates=8, seed=0))
             emit(f"fig10.{name}.{mode}.paths", pus, f"F={pat.num_flows}")
             sat, us = timed(lambda: saturation_throughput(
                 fp, tol=0.02, iters=fw_iters(mode), engine="batched"))
-            emit(f"fig10.{name}.{mode}", us,
-                 f"N={g.n};radix={g.params.get('radix', '?')};sat={sat:.3f}")
+            derived = (f"N={g.n};radix={g.params.get('radix', '?')};"
+                       f"sat={sat:.3f}")
+            if mode in ("ugal", "ugal_pf"):
+                # diagnostic solve outside the timed section, so the row's
+                # timing stays comparable across PRs
+                derived += f";fw_err={truncation_error(fp, sat, fw_iters(mode)):.4f}"
+            emit(f"fig10.{name}.{mode}", us, derived)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,14 @@
-"""Fig. 12: bisection cut fraction (spectral+KL; METIS unavailable)."""
+"""Fig. 12: bisection cut fraction (spectral+KL; METIS unavailable).
+
+The Fiedler power iteration and KL gain scans run on the CSR view
+(gather + bincount segment sums), so BENCH_LARGE=1 can extend the figure to
+the 5k-6.5k-router scale tier without dense [n, n] work.
+"""
 from repro.core import topologies as tp
 from repro.core.metrics import bisection_fraction
 from repro.core.polarfly import build_polarfly
 
-from .common import emit, timed
+from .common import emit, large, timed
 
 
 def run():
@@ -15,9 +20,16 @@ def run():
         "JF": tp.build_jellyfish(307, 18, seed=0),
         "FT18": tp.build_fat_tree(18, 3),
     }
+    if large():
+        graphs.update({
+            "PS9x61": tp.build_polarstar(9, 61),
+            "SF43": tp.build_slimfly(43),
+            "PF79": build_polarfly(79).graph,
+            "JF6321": tp.build_jellyfish(6321, 80, seed=0),
+        })
     for name, g in graphs.items():
         frac, us = timed(lambda: bisection_fraction(g))
-        emit(f"fig12.bisection.{name}", us, f"cut_frac={frac:.3f}")
+        emit(f"fig12.bisection.{name}", us, f"N={g.n};cut_frac={frac:.3f}")
 
 
 if __name__ == "__main__":

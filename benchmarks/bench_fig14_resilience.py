@@ -1,18 +1,28 @@
-"""Fig. 14: diameter/ASPL under random link failures."""
+"""Fig. 14: diameter/ASPL under random link failures.
+
+BENCH_LARGE=1 adds scale-tier graphs whose sweeps stream through the sparse
+blocked-BFS engine (diameter/ASPL never materializes an [n, n] table there),
+at a shorter failure-fraction list to keep the tier's n * E BFS cost sane.
+"""
 from repro.core import topologies as tp
 from repro.core.metrics import resilience_sweep
 from repro.core.polarfly import build_polarfly
 
-from .common import emit, timed
+from .common import emit, large, timed
 
 
 def run():
-    graphs = {"PF13": build_polarfly(13).graph,
-              "SF9": tp.build_slimfly(9),
-              "JF": tp.build_jellyfish(183, 14, seed=0),
-              "DF1": tp.build_dragonfly(6, 3)}
-    fracs = [0.05, 0.2, 0.4, 0.55]
-    for name, g in graphs.items():
+    graphs = {"PF13": (build_polarfly(13).graph, [0.05, 0.2, 0.4, 0.55]),
+              "SF9": (tp.build_slimfly(9), [0.05, 0.2, 0.4, 0.55]),
+              "JF": (tp.build_jellyfish(183, 14, seed=0), [0.05, 0.2, 0.4, 0.55]),
+              "DF1": (tp.build_dragonfly(6, 3), [0.05, 0.2, 0.4, 0.55])}
+    if large():
+        graphs.update({
+            "PS9x61": (tp.build_polarstar(9, 61), [0.05, 0.2]),
+            "PF79": (build_polarfly(79).graph, [0.05, 0.2]),
+            "JF5551": (tp.build_jellyfish(5551, 40, seed=0), [0.05, 0.2]),
+        })
+    for name, (g, fracs) in graphs.items():
         pts, us = timed(lambda: resilience_sweep(g, fracs, seed=1))
         summary = ";".join(f"f{int(p.fail_fraction*100)}:d={p.diameter}"
                            for p in pts)

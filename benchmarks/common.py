@@ -44,5 +44,12 @@ def smoke() -> bool:
     return os.environ.get("BENCH_SMOKE", "0") not in ("", "0")
 
 
+def large() -> bool:
+    """True when BENCH_LARGE=1: figure benchmarks add the 5k-25k-endpoint
+    scale tier (PS(9,61) / SF(43) / PF(79) / matched-radix Jellyfish) that
+    is only feasible with the sparse blocked-BFS graph engine."""
+    return os.environ.get("BENCH_LARGE", "0") not in ("", "0")
+
+
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)

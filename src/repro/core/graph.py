@@ -1,18 +1,28 @@
 """Lightweight undirected-graph container shared by all topologies.
 
-Host-side (numpy) representation: neighbor lists + an optional dense boolean
-adjacency.  Everything downstream (metrics, simulator, fabric) consumes this.
+Host-side (numpy) representation: neighbor lists + derived views.  The
+primary derived view is the cached CSR pair ``csr = (indptr, indices)``
+(`indptr` int64 [n+1], `indices` int32 [E_dir], rows sorted) that the sparse
+graph engine (blocked BFS, streaming metrics, CSR edge-id lookups) consumes;
+the dense boolean ``adjacency`` remains available as the small-n reference
+view.  Everything downstream (metrics, simulator, fabric) consumes this.
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["Graph", "GraphBuilder"]
+__all__ = ["Graph", "GraphBuilder", "UNREACHABLE"]
+
+# Canonical "no path" sentinel for every core module: unreachable entries of
+# distance arrays (int16) and missing next hops (int32) both hold this value.
+# (Dense argmin scans that need a +inf-like mask use np.iinfo(...).max
+# locally; UNREACHABLE is the only value stored in returned tables.)
+UNREACHABLE = np.int16(-1)
 
 
 @dataclass
@@ -26,8 +36,26 @@ class Graph:
 
     # -- basic quantities ------------------------------------------------------
     @functools.cached_property
+    def csr(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Cached CSR view: (indptr int64 [n+1], indices int32 [E_dir]).
+
+        Row u's sorted neighbors are indices[indptr[u]:indptr[u+1]].  This is
+        the primary representation of the sparse engine; the directed edge id
+        space of the simulator (`DirectedEdges`) uses the same layout.
+        """
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        if self.n:
+            np.cumsum([len(nb) for nb in self.neighbors], out=indptr[1:])
+        if self.n and indptr[-1]:
+            indices = np.concatenate(self.neighbors).astype(np.int32,
+                                                            copy=False)
+        else:
+            indices = np.zeros(0, dtype=np.int32)
+        return indptr, indices
+
+    @functools.cached_property
     def degrees(self) -> np.ndarray:
-        return np.array([len(nb) for nb in self.neighbors], dtype=np.int64)
+        return np.diff(self.csr[0])
 
     @functools.cached_property
     def num_edges(self) -> int:
@@ -38,22 +66,26 @@ class Graph:
         return int(self.degrees.max())
 
     @functools.cached_property
+    def _csr_rows(self) -> np.ndarray:
+        """[E_dir] int64 source row of every CSR slot."""
+        return np.repeat(np.arange(self.n, dtype=np.int64), self.degrees)
+
+    @functools.cached_property
     def adjacency(self) -> np.ndarray:
-        """Dense boolean adjacency [n, n]."""
+        """Dense boolean adjacency [n, n] (small-n reference view)."""
+        _, indices = self.csr
         a = np.zeros((self.n, self.n), dtype=bool)
-        for u, nb in enumerate(self.neighbors):
-            a[u, nb] = True
+        a[self._csr_rows, indices] = True
         return a
 
     @functools.cached_property
     def edge_list(self) -> np.ndarray:
-        """[E, 2] int32, u < v."""
-        out = []
-        for u, nb in enumerate(self.neighbors):
-            for v in nb:
-                if u < v:
-                    out.append((u, v))
-        return np.array(out, dtype=np.int32).reshape(-1, 2)
+        """[E, 2] int32, u < v, sorted lexicographically."""
+        _, indices = self.csr
+        rows = self._csr_rows
+        keep = rows < indices
+        return np.stack([rows[keep], indices[keep]],
+                        axis=1).astype(np.int32).reshape(-1, 2)
 
     def has_edge(self, u: int, v: int) -> bool:
         nb = self.neighbors[u]
@@ -62,19 +94,34 @@ class Graph:
 
     def subgraph_without_edges(self, removed: np.ndarray) -> "Graph":
         """Copy of the graph with the given [k, 2] edges removed."""
-        rem = {(int(u), int(v)) for u, v in removed} | {(int(v), int(u)) for u, v in removed}
-        nbs = []
-        for u, nb in enumerate(self.neighbors):
-            nbs.append(np.array([v for v in nb if (u, int(v)) not in rem], dtype=np.int32))
+        indptr, indices = self.csr
+        rows = self._csr_rows
+        n = max(self.n, 1)
+        if len(removed):
+            r = np.asarray(removed, dtype=np.int64).reshape(-1, 2)
+            bad = np.concatenate([r[:, 0] * n + r[:, 1],
+                                  r[:, 1] * n + r[:, 0]])
+            keep = ~np.isin(rows * n + indices, bad)
+        else:
+            keep = np.ones(len(indices), dtype=bool)
+        deg = np.bincount(rows[keep], minlength=self.n)
+        nbs = np.split(indices[keep], np.cumsum(deg)[:-1])
         return Graph(self.name + "-damaged", self.n, nbs, dict(self.params))
 
     def validate(self) -> None:
-        """Symmetry + no self loops + sorted neighbor lists."""
-        for u, nb in enumerate(self.neighbors):
-            assert np.all(np.diff(nb) > 0), f"neighbors of {u} not strictly sorted"
-            assert u not in nb, f"self loop at {u}"
-            for v in nb:
-                assert self.has_edge(int(v), u), f"asymmetric edge ({u},{v})"
+        """Symmetry + no self loops + sorted neighbor lists (vectorized)."""
+        indptr, indices = self.csr
+        rows = self._csr_rows
+        assert not (rows == indices).any(), \
+            f"self loop at {rows[rows == indices][:1]}"
+        interior = np.ones(len(indices), dtype=bool)
+        interior[indptr[:-1][self.degrees > 0]] = False  # first slot per row
+        assert (np.diff(indices)[interior[1:]] > 0).all(), \
+            "neighbor lists not strictly sorted"
+        n = max(self.n, 1)
+        fwd = rows * n + indices  # already sorted row-major
+        rev = np.sort(indices.astype(np.int64) * n + rows)
+        assert np.array_equal(fwd, rev), "adjacency not symmetric"
 
 
 class GraphBuilder:

@@ -14,9 +14,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .gf import is_prime_power, primes_and_prime_powers
-from .graph import Graph
+from .graph import Graph, UNREACHABLE
 from .polarfly import moore_bound
-from .routing import all_pairs_distances
+from .routing import _resolve_engine, all_pairs_distances, distance_blocks
 
 __all__ = [
     "diameter_and_aspl",
@@ -30,17 +30,32 @@ __all__ = [
 ]
 
 
-def diameter_and_aspl(g: Graph, dist: Optional[np.ndarray] = None) -> Tuple[int, float]:
+def diameter_and_aspl(g: Graph, dist: Optional[np.ndarray] = None,
+                      engine: str = "auto") -> Tuple[int, float]:
     """(diameter, average shortest path length) over connected pairs.
 
     Returns diameter = -1 for a disconnected graph (paper footnote 1: the
-    diameter becomes infinite on disconnection)."""
+    diameter becomes infinite on disconnection).  With no precomputed `dist`
+    and the sparse engine selected (auto above the dense threshold), the
+    reduction streams over blocked-BFS source blocks and never materializes
+    an [n, n] matrix; sums stay in exact integer arithmetic, so both engines
+    return identical values.
+    """
+    if dist is None and _resolve_engine(engine, g.n) == "sparse":
+        diam, total, pairs = 0, 0, 0
+        for srcs, db, _ in distance_blocks(g):
+            if (db == UNREACHABLE).any():  # diagonal is 0, so any hit is real
+                return int(UNREACHABLE), float("inf")
+            diam = max(diam, int(db.max()))
+            total += int(db.sum(dtype=np.int64))  # diagonal contributes 0
+            pairs += db.shape[0] * (g.n - 1)
+        return diam, total / pairs
     if dist is None:
-        dist = all_pairs_distances(g)
+        dist = all_pairs_distances(g, engine=engine)
     off = ~np.eye(g.n, dtype=bool)
     vals = dist[off]
-    if (vals < 0).any():
-        return -1, float("inf")
+    if (vals == UNREACHABLE).any():
+        return int(UNREACHABLE), float("inf")
     return int(vals.max()), float(vals.mean())
 
 
@@ -72,20 +87,20 @@ def slimfly_feasible_degrees(max_k: int) -> List[int]:
 
 def _fiedler_vector(g: Graph, iters: int = 600, seed: int = 0) -> np.ndarray:
     """Approximate Fiedler (2nd-smallest Laplacian eigen-) vector via power
-    iteration on (c*I - L), deflating the all-ones vector."""
+    iteration on (c*I - L), deflating the all-ones vector.  The A @ x product
+    runs as a CSR gather + bincount segment sum (no per-node Python loop)."""
     n = g.n
     deg = g.degrees.astype(np.float64)
     c = 2.0 * deg.max() + 1.0
     rng = np.random.default_rng(seed)
     x = rng.standard_normal(n)
     ones = np.ones(n) / np.sqrt(n)
-    nbs = g.neighbors
+    _, indices = g.csr
+    rows = g._csr_rows
     for _ in range(iters):
         x = x - (x @ ones) * ones
         # y = (c I - L) x = c x - deg*x + A x
-        ax = np.zeros(n)
-        for u in range(n):
-            ax[u] = x[nbs[u]].sum()
+        ax = np.bincount(rows, weights=x[indices], minlength=n)
         x = (c - deg) * x + ax
         x /= np.linalg.norm(x) + 1e-30
     return x
@@ -94,13 +109,14 @@ def _fiedler_vector(g: Graph, iters: int = 600, seed: int = 0) -> np.ndarray:
 def _kl_refine(g: Graph, side: np.ndarray, passes: int = 4) -> np.ndarray:
     """Balanced Kernighan-Lin-style refinement by greedy pair swaps."""
     side = side.copy()
+    _, indices = g.csr
+    rows = g._csr_rows
+    deg = g.degrees
     for _ in range(passes):
         # KL gain of flipping u: external - internal edge count
-        gain = np.zeros(g.n)
-        for u in range(g.n):
-            nb = g.neighbors[u]
-            same = (side[nb] == side[u]).sum()
-            gain[u] = (len(nb) - same) - same
+        same = np.bincount(rows, weights=(side[indices] == side[rows]),
+                           minlength=g.n)
+        gain = deg - 2.0 * same
         a = np.where(side)[0]
         b = np.where(~side)[0]
         a = a[np.argsort(-gain[a])][: max(1, len(a) // 8)]

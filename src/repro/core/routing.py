@@ -14,20 +14,58 @@ Batched API: `minimal_paths(next_hop, src, dst, diameter)` extracts [F, D+1]
 node sequences for F flows at once via `diameter` next-hop gathers (at most 2
 for diameter-2 graphs like ER_q); `RoutingTables.paths` is the bound
 convenience.  The scalar `minimal_path` remains for one-off queries.
+
+Two-engine convention
+---------------------
+Like the path builders (`repro.simulation.paths`) and the fluid solver
+(`repro.simulation.fluid`), the all-pairs distance / next-hop computation has
+two engines that must agree bit-exactly:
+
+* ``engine="dense"`` -- the small-n reference engine: boolean-matrix frontier
+  expansion (switching to a float32 BLAS matmul for n >= 512), then a
+  per-source argmin over neighbor distance rows for the next-hop table.
+  Memory envelope: O(n^2) for the frontier/reachability masks, plus another
+  O(n^2) float32 pair above the BLAS threshold (~4 * n^2 * 4 bytes peak) --
+  fine through a few thousand vertices, cubic time per hop beyond that.
+* ``engine="sparse"`` -- the scale engine: a source-blocked frontier BFS over
+  the cached CSR view ``Graph.csr = (indptr int64 [n+1], indices int32
+  [E_dir])``.  A block of B sources expands level by level with vectorized
+  ragged gathers; first-hop labels propagate along the shortest-path DAG as a
+  segmented minimum, which reproduces the dense engine's lowest-id tie break
+  exactly (the set of valid first hops toward w is exactly the set of
+  neighbors v of s with dist(v, w) == dist(s, w) - 1, and the min of that set
+  equals the min over shortest-path predecessors of their first-hop minima).
+  Memory envelope: O(B * n) for the block's distance / next-hop / frontier
+  rows plus O(B * E_dir) transient edge-gather arrays -- `bfs_block_size`
+  picks B from a byte budget (default `_BFS_BUDGET_BYTES`), and
+  `bfs_peak_bytes` exposes the resulting peak estimate (asserted < 2 GiB for
+  the benchmark scale tier by tests/test_sparse_engine.py).
+
+``engine="auto"`` (every public default) picks dense below `_DENSE_MAX_N`
+vertices and sparse above; both produce identical int16 distances (with
+`UNREACHABLE` = -1 marking disconnected pairs) and identical int32 next-hop
+tables, on intact and damaged graphs.  `distance_blocks` additionally exposes
+the sparse engine as a streaming iterator so metrics (diameter / ASPL,
+resilience sweeps) never need to materialize an [n, n] table at all.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, UNREACHABLE
 from .polarfly import PolarFly
 
 __all__ = [
+    "UNREACHABLE",
     "bfs_distances",
+    "bfs_block_size",
+    "bfs_peak_bytes",
+    "distance_blocks",
+    "sparse_routing_tables",
     "all_pairs_distances",
     "next_hop_table",
     "polarfly_next_hop_table",
@@ -39,38 +77,183 @@ __all__ = [
     "compact_valiant_candidates",
 ]
 
+# Largest vertex count routed through the dense reference engine by default;
+# tests assert sparse/dense bit-identity across topologies up to this size.
+_DENSE_MAX_N = 2048
+
+# int16 stand-in for +inf in dense argmin scans (never stored in outputs;
+# UNREACHABLE is the only sentinel that leaves this module).
+_INT16_INF = np.int16(np.iinfo(np.int16).max)
+
+# Default working-set budget for the blocked BFS (transient arrays only; the
+# caller's output tables are on top of this).
+_BFS_BUDGET_BYTES = 512 * 2 ** 20
+
+
+# ----------------------------------------------------------------------------
+# sparse engine: source-blocked frontier BFS over the CSR view
+# ----------------------------------------------------------------------------
+
+def _bfs_bytes_per_source(n: int, e_dir: int) -> int:
+    """Working-set estimate for one BFS source row.
+
+    Per source: int16 distance row (2n) + int32 first-hop row (4n) + the
+    frontier/newly boolean rows (2n); the worst-case level touches every
+    directed edge once, and each frontier edge carries ~24 bytes of transient
+    gather state (int64 row + gather index, int32 target + label).
+    """
+    return 8 * max(n, 1) + 24 * e_dir
+
+
+def bfs_block_size(n: int, e_dir: int,
+                   budget_bytes: int = _BFS_BUDGET_BYTES) -> int:
+    """Sources per blocked-BFS batch so the working set fits `budget_bytes`.
+
+    Always returns at least 1 (a single source is the floor the streaming
+    engine can run at) and never more than n.
+    """
+    per = _bfs_bytes_per_source(n, e_dir)
+    return int(min(max(n, 1), max(1, budget_bytes // max(per, 1))))
+
+
+def bfs_peak_bytes(n: int, e_dir: int, block: int,
+                   dist_table: bool = True, next_hop: bool = True) -> int:
+    """Estimated peak bytes of a blocked all-pairs run at this block size:
+    transient working set + whichever [n, n] output tables are materialized
+    (int16 distances and/or int32 next hops; streaming callers pass False)."""
+    out = n * n * ((2 if dist_table else 0) + (4 if next_hop else 0))
+    return block * _bfs_bytes_per_source(n, e_dir) + out
+
+
+def _bfs_block(indptr: np.ndarray, indices: np.ndarray, sources: np.ndarray,
+               want_next_hop: bool) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Frontier BFS from a block of B sources at once.
+
+    Returns (dist [B, n] int16, first_hop [B, n] int32 or None).  Each level
+    expands every (source-row, frontier-node) pair with one vectorized ragged
+    gather from the CSR arrays; first-hop labels propagate as a segmented
+    minimum over the discovered edges, matching the dense next-hop table's
+    lowest-id tie break bit-exactly (see module docstring).
+    """
+    b, n = len(sources), len(indptr) - 1
+    rows0 = np.arange(b)
+    src = sources.astype(np.int64)
+    dist = np.full((b, n), UNREACHABLE, dtype=np.int16)
+    dist[rows0, src] = 0
+    nh = None
+    if want_next_hop:
+        nh = np.full((b, n), UNREACHABLE, dtype=np.int32)
+        nh[rows0, src] = src
+    frow, fnode = rows0, src
+    d = 0
+    while fnode.size:
+        d += 1
+        counts = indptr[fnode + 1] - indptr[fnode]
+        total = int(counts.sum())
+        if total == 0:
+            break
+        # ragged gather of every frontier node's neighbor range
+        starts = indptr[fnode]
+        cum = np.cumsum(counts)
+        gather = np.repeat(starts - (cum - counts), counts) + np.arange(total)
+        nbrs = indices[gather].astype(np.int64)
+        erow = np.repeat(frow, counts)
+        unv = dist[erow, nbrs] == UNREACHABLE
+        if want_next_hop and d > 1:
+            usrc = np.repeat(fnode, counts)[unv]
+        erow, nbrs = erow[unv], nbrs[unv]
+        newly = np.zeros((b, n), dtype=bool)
+        newly[erow, nbrs] = True
+        dist[newly] = np.int16(d)
+        if want_next_hop and erow.size:
+            # level 1 seeds the labels (first hop of a neighbor is itself);
+            # deeper levels take the min label over all discovering edges.
+            # The segmented min runs as one combined-key sort: keys order by
+            # (row, node) first and label second, so the head of each
+            # (row, node) run carries its minimum label.
+            lab = nbrs if d == 1 else nh[erow, usrc].astype(np.int64)
+            combined = np.sort((erow * n + nbrs) * (n + 1) + lab)
+            flat = combined // (n + 1)
+            head = np.empty(flat.size, dtype=bool)
+            head[0] = True
+            np.not_equal(flat[1:], flat[:-1], out=head[1:])
+            nh.ravel()[flat[head]] = (combined[head] % (n + 1)).astype(np.int32)
+        frow, fnode = np.nonzero(newly)
+    return dist, nh
+
+
+def distance_blocks(g: Graph, block: Optional[int] = None,
+                    next_hop: bool = False,
+                    budget_bytes: int = _BFS_BUDGET_BYTES,
+                    ) -> Iterator[Tuple[np.ndarray, np.ndarray,
+                                        Optional[np.ndarray]]]:
+    """Stream the sparse engine: yields (sources, dist [B, n] int16,
+    first_hop [B, n] int32 or None) per source block.
+
+    Lets metrics consume all-pairs information in O(block * (n + E)) memory
+    without ever materializing an [n, n] table.
+    """
+    indptr, indices = g.csr
+    if block is None:
+        block = bfs_block_size(g.n, len(indices), budget_bytes)
+    for lo in range(0, g.n, block):
+        srcs = np.arange(lo, min(lo + block, g.n))
+        dist, nh = _bfs_block(indptr, indices, srcs, next_hop)
+        yield srcs, dist, nh
+
+
+def sparse_routing_tables(g: Graph, block: Optional[int] = None,
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Full ([n, n] int16 distances, [n, n] int32 next hops) via the blocked
+    BFS engine; bit-identical to the dense `all_pairs_distances` +
+    `next_hop_table` pair."""
+    dist = np.empty((g.n, g.n), dtype=np.int16)
+    nh = np.empty((g.n, g.n), dtype=np.int32)
+    for srcs, db, nb in distance_blocks(g, block, next_hop=True):
+        dist[srcs] = db
+        nh[srcs] = nb
+    return dist, nh
+
+
+def _resolve_engine(engine: str, n: int) -> str:
+    if engine == "auto":
+        return "dense" if n <= _DENSE_MAX_N else "sparse"
+    if engine not in ("dense", "sparse"):
+        raise ValueError(f"unknown engine {engine!r}")
+    return engine
+
+
+# ----------------------------------------------------------------------------
+# single-source + dense reference engine
+# ----------------------------------------------------------------------------
 
 def bfs_distances(g: Graph, src: int) -> np.ndarray:
-    """Single-source BFS distances (int16, -1 = unreachable)."""
-    dist = -np.ones(g.n, dtype=np.int16)
-    dist[src] = 0
-    frontier = [src]
-    d = 0
-    while frontier:
-        d += 1
-        nxt = []
-        for u in frontier:
-            for v in g.neighbors[u]:
-                v = int(v)
-                if dist[v] < 0:
-                    dist[v] = d
-                    nxt.append(v)
-        frontier = nxt
-    return dist
+    """Single-source BFS distances (int16, UNREACHABLE = -1)."""
+    indptr, indices = g.csr
+    dist, _ = _bfs_block(indptr, indices, np.array([src]), False)
+    return dist[0]
 
 
-def all_pairs_distances(g: Graph) -> np.ndarray:
-    """[n, n] int16 distance matrix via boolean-matrix BFS (vectorized).
+def all_pairs_distances(g: Graph, engine: str = "auto") -> np.ndarray:
+    """[n, n] int16 distance matrix (UNREACHABLE = -1 off-diagonal marks
+    disconnected pairs).
 
-    Above a size threshold the frontier expansion runs as a float32 matmul
-    (BLAS) instead of a boolean one: numpy's bool matmul is a generic inner
-    loop, ~10-20x slower at the PF(37+)/PolarStar scales the larger-q
-    benchmarks reach (same reachability result either way).
+    engine="dense" runs the boolean-matrix BFS reference: above a size
+    threshold the frontier expansion runs as a float32 matmul (BLAS) instead
+    of a boolean one -- numpy's bool matmul is a generic inner loop, ~10-20x
+    slower at the PF(37+)/PolarStar scales (same reachability either way).
+    engine="sparse" assembles the same matrix from the blocked frontier BFS
+    in O(block * (n + E)) working memory.  engine="auto" picks by size.
     """
+    if _resolve_engine(engine, g.n) == "sparse":
+        dist = np.empty((g.n, g.n), dtype=np.int16)
+        for srcs, db, _ in distance_blocks(g):
+            dist[srcs] = db
+        return dist
     n = g.n
     adj = g.adjacency
     adj_f = adj.astype(np.float32) if n >= 512 else None
-    dist = np.full((n, n), -1, dtype=np.int16)
+    dist = np.full((n, n), UNREACHABLE, dtype=np.int16)
     np.fill_diagonal(dist, 0)
     reach = np.eye(n, dtype=bool)
     frontier = np.eye(n, dtype=bool)
@@ -88,16 +271,21 @@ def all_pairs_distances(g: Graph) -> np.ndarray:
     return dist
 
 
-def next_hop_table(g: Graph, dist: Optional[np.ndarray] = None) -> np.ndarray:
+def next_hop_table(g: Graph, dist: Optional[np.ndarray] = None,
+                   engine: str = "auto") -> np.ndarray:
     """[n, n] int32 next-hop table for minimal routing on any graph.
 
     nh[s, d] = neighbor of s on a shortest s->d path (lowest-id tie break;
-    deterministic).  nh[s, s] = s; unreachable -> -1.
+    deterministic).  nh[s, s] = s; unreachable -> UNREACHABLE (-1).  Both
+    engines produce bit-identical tables; the sparse engine recomputes its
+    own blocked BFS and ignores `dist`.
     """
+    if _resolve_engine(engine, g.n) == "sparse":
+        return sparse_routing_tables(g)[1]
     if dist is None:
-        dist = all_pairs_distances(g)
+        dist = all_pairs_distances(g, engine="dense")
     n = g.n
-    nh = -np.ones((n, n), dtype=np.int32)
+    nh = np.full((n, n), UNREACHABLE, dtype=np.int32)
     np.fill_diagonal(nh, np.arange(n))
     for s in range(n):
         nbs = g.neighbors[s]
@@ -105,11 +293,11 @@ def next_hop_table(g: Graph, dist: Optional[np.ndarray] = None) -> np.ndarray:
             continue
         # next hop: neighbor v minimizing dist[v, d]
         dn = dist[nbs]  # [deg, n]
-        ok = dn >= 0
-        dn = np.where(ok, dn, np.int16(32000))
+        ok = dn != UNREACHABLE
+        dn = np.where(ok, dn, _INT16_INF)
         best = np.argmin(dn, axis=0)  # [n]
         cand = nbs[best]
-        reachable = dist[s] >= 0
+        reachable = dist[s] != UNREACHABLE
         good = dn[best, np.arange(n)] == dist[s] - 1
         nh[s] = np.where(reachable & good, cand, nh[s])
         nh[s, s] = s
@@ -148,12 +336,20 @@ class RoutingTables:
         return minimal_paths(self.next_hop, src, dst, self.diameter)
 
 
-def build_routing(g: Graph, pf: Optional[PolarFly] = None) -> RoutingTables:
-    dist = all_pairs_distances(g)
-    if pf is not None and pf.graph is g:
-        nh = polarfly_next_hop_table(pf)
+def build_routing(g: Graph, pf: Optional[PolarFly] = None,
+                  engine: str = "auto") -> RoutingTables:
+    """Build routing tables via the dense reference engine or the blocked
+    sparse engine (`engine="auto"` picks by size; identical tables either
+    way).  When `pf` matches `g`, the dense path uses the O(1) algebraic
+    PolarFly table, which coincides with the BFS table entry-for-entry."""
+    if _resolve_engine(engine, g.n) == "sparse":
+        dist, nh = sparse_routing_tables(g)
     else:
-        nh = next_hop_table(g, dist)
+        dist = all_pairs_distances(g, engine="dense")
+        if pf is not None and pf.graph is g:
+            nh = polarfly_next_hop_table(pf)
+        else:
+            nh = next_hop_table(g, dist, engine="dense")
     diam = int(dist.max())
     return RoutingTables(graph=g, dist=dist, next_hop=nh, diameter=diam)
 
@@ -179,8 +375,8 @@ def minimal_paths(next_hop: np.ndarray, src: np.ndarray, dst: np.ndarray,
     cur = src
     for h in range(diameter):
         nxt = next_hop[cur, dst].astype(np.int64)
-        if (nxt < 0).any():
-            i = int(np.flatnonzero(nxt < 0)[0])
+        if (nxt == UNREACHABLE).any():
+            i = int(np.flatnonzero(nxt == UNREACHABLE)[0])
             raise ValueError(f"no route {int(src[i])}->{int(dst[i])}")
         nodes[:, h + 1] = nxt
         cur = nxt

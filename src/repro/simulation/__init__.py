@@ -3,4 +3,5 @@
 from .traffic import TrafficPattern, make_pattern, PATTERNS  # noqa: F401
 from .paths import (FlowPaths, build_flow_paths,  # noqa: F401
                     build_flow_paths_reference, build_directed_edges)
-from .fluid import FluidResult, evaluate_load, saturation_throughput, latency_curve  # noqa: F401
+from .fluid import (FluidResult, SaturationResult, evaluate_load,  # noqa: F401
+                    saturation_throughput, truncation_error, latency_curve)

@@ -67,7 +67,8 @@ import jax.numpy as jnp
 
 from .paths import FlowPaths
 
-__all__ = ["FluidResult", "evaluate_load", "saturation_throughput", "latency_curve"]
+__all__ = ["FluidResult", "SaturationResult", "evaluate_load",
+           "saturation_throughput", "truncation_error", "latency_curve"]
 
 _EPS = 1e-6
 _RHO_CAP = 0.999
@@ -87,6 +88,24 @@ class FluidResult:
     mean_hops: float
 
 
+@dataclass
+class SaturationResult:
+    """`saturation_throughput(..., return_info=True)` payload.
+
+    `truncation_err` estimates the adaptive-mode Frank-Wolfe truncation
+    noise at the returned saturation load: the L-inf gap between the
+    last-iterate link loads and the running average of the visited iterates'
+    link loads.  Both converge to the Wardrop equilibrium loads, so the gap
+    shrinks as O(1/iters); a gap comparable to the bisection tolerance means
+    `iters` is too low to certify the result (see the module docstring's
+    truncation-noise discussion -- this quantifies the "iters >= 3000" rule
+    of thumb instead of assuming it).  Exactly 0.0 for oblivious modes,
+    whose split is load-independent.
+    """
+    saturation: float
+    truncation_err: float
+
+
 def _queue_delay(rho: jnp.ndarray) -> jnp.ndarray:
     """M/D/1 waiting time, capped near saturation."""
     r = jnp.clip(rho, 0.0, _RHO_CAP)
@@ -97,7 +116,7 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                num_links: int, mode: str, barrier: bool = True):
     """Shared Frank-Wolfe building blocks, traced inside each jitted entry.
 
-    Returns (init_split, equilibrate, loads, cost_of):
+    Returns (init_split, equilibrate, loads, cost_of, fw_target):
 
       init_split        [F, K] mode-dependent starting split.
       equilibrate(split0, demand, iters, t0)
@@ -106,6 +125,10 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                         oblivious modes (their split is the fixed point).
       loads(split, demand) -> rho [E]
       cost_of(rho)      -> per-candidate path cost [F, K]
+      fw_target(split, rho) -> [F, K] Frank-Wolfe best-response target
+                        (adaptive modes only; includes the UGAL_PF gate),
+                        shared by `equilibrate` and the truncation-error
+                        probe so both apply identical per-step math.
 
     Link loads use the incidence structure from `FlowPaths.device_arrays`:
     a padded per-edge gather matrix in the common case (XLA:CPU serializes
@@ -144,33 +167,36 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         d = _barrier(jnp.concatenate([delay, jnp.zeros(1)]))  # pad slot
         return d[eidx].sum(-1)  # [F,K]
 
+    def fw_target(split, rho):
+        cost = jnp.where(valid, cost_of(rho), jnp.inf)
+        target = jax.nn.one_hot(jnp.argmin(cost, axis=1), split.shape[1])
+        if mode == "ugal_pf":
+            # the 2/3 local-occupancy adaptation threshold (paper
+            # §VII-C): occupancy is of the 128-flit (32-packet) output
+            # buffer, whose M/D/1 mean queue length only crosses 2/3
+            # near rho ~ 0.98
+            qlen = _queue_delay(rho[first_edge]) * rho[first_edge]  # Little
+            gate = jnp.clip((qlen / _BUF_PACKETS - 2.0 / 3.0) * 8.0,
+                            0.0, 1.0)
+            gate = jnp.where(has_alt, gate, 0.0)
+            target = gate[:, None] * target + (1 - gate)[:, None] * minvec
+        return target
+
     def equilibrate(split0, demand, iters: int, t0: float = 0.0):
         if mode not in ("ugal", "ugal_pf"):
             return split0
 
         def body(split, t):
             rho = loads(split, demand)
-            cost = jnp.where(valid, cost_of(rho), jnp.inf)
-            target = jax.nn.one_hot(jnp.argmin(cost, axis=1), split.shape[1])
-            if mode == "ugal_pf":
-                # the 2/3 local-occupancy adaptation threshold (paper
-                # §VII-C): occupancy is of the 128-flit (32-packet) output
-                # buffer, whose M/D/1 mean queue length only crosses 2/3
-                # near rho ~ 0.98
-                qlen = _queue_delay(rho[first_edge]) * rho[first_edge]  # Little
-                gate = jnp.clip((qlen / _BUF_PACKETS - 2.0 / 3.0) * 8.0,
-                                0.0, 1.0)
-                gate = jnp.where(has_alt, gate, 0.0)
-                target = gate[:, None] * target + (1 - gate)[:, None] * minvec
             gamma = 2.0 / (t + 2.0)
-            return (1 - gamma) * split + gamma * target, None
+            return (1 - gamma) * split + gamma * fw_target(split, rho), None
 
         split, _ = jax.lax.scan(
             body, split0, t0 + jnp.arange(iters, dtype=jnp.float32))
         return split
 
     init = minvec if mode in ("min", "ugal", "ugal_pf") else uniform
-    return init, equilibrate, loads, cost_of
+    return init, equilibrate, loads, cost_of, fw_target
 
 
 def _max_util(rho, num_links: int):
@@ -196,7 +222,7 @@ def _metrics(split, rho, cost, valid, hops, demand, offered, num_links: int):
 def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
            num_links: int, mode: str, offered: float, iters: int = 250):
     """Single-load reference solve: (split [F,K], rho [E], cost [F,K])."""
-    init, equilibrate, loads, cost_of = _fw_pieces(
+    init, equilibrate, loads, cost_of, _ = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode)
     demand = demand * offered  # [F]
@@ -213,7 +239,7 @@ def _solve_batch(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                  iters: int = 250):
     """vmap of the cold-start equilibrium over a vector of offered loads;
     one compiled call evaluates the whole latency sweep."""
-    init, equilibrate, loads, cost_of = _fw_pieces(
+    init, equilibrate, loads, cost_of, _ = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode, barrier=False)
 
@@ -257,7 +283,7 @@ def _saturation_batch(eidx, loads_arrays, loads_kind, valid, is_min,
     step-size schedule at `_WARM_T0` (the probes are unrolled, so each gets
     its own static trip count).
     """
-    init, equilibrate, loads, _ = _fw_pieces(
+    init, equilibrate, loads, _, _ = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode)
     split = equilibrate(init, demand, iters)  # offered = 1.0
@@ -273,6 +299,32 @@ def _saturation_batch(eidx, loads_arrays, loads_kind, valid, is_min,
         lo = jnp.where(feasible, mid, lo)
         hi = jnp.where(feasible, hi, mid)
     return jnp.where(max1 <= 1.0, jnp.ones((), jnp.float32), lo)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "iters"))
+def _truncation_gap(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+                    demand, num_links: int, mode: str, offered, iters: int):
+    """L-inf gap between last-iterate and averaged Frank-Wolfe link loads
+    after `iters` steps from the cold-start split at `offered` load (the
+    estimated truncation error reported by `saturation_throughput`)."""
+    init, _, loads, _, fw_target = _fw_pieces(
+        eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+        num_links, mode)
+    d = demand * offered
+
+    def body(carry, t):
+        split, acc = carry
+        rho = loads(split, d)
+        gamma = 2.0 / (t + 2.0)
+        return ((1 - gamma) * split + gamma * fw_target(split, rho),
+                acc + rho), None
+
+    (split, acc), _ = jax.lax.scan(
+        body, (init, jnp.zeros(num_links)),
+        jnp.arange(iters, dtype=jnp.float32))
+    return jnp.max(jnp.abs(loads(split, d) - acc / iters))
 
 
 def _run(fp: FlowPaths, offered: float, iters: int):
@@ -302,7 +354,7 @@ def evaluate_load(fp: FlowPaths, offered: float, iters: int = 250) -> FluidResul
 
 def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
                           iters: int = 250, engine: str = "batched",
-                          probe_iters: int = 0) -> float:
+                          probe_iters: int = 0, return_info: bool = False):
     """Largest per-endpoint offered load with max link utilization <= 1
     (bisection; adaptive splits re-equilibrate at every probe).
 
@@ -310,6 +362,12 @@ def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
     warm-started probes; engine="scalar" is the per-probe reference.
     `probe_iters` (batched only) fixes every warm probe's Frank-Wolfe step
     count; 0 picks the default front-loaded schedule (`_probe_schedule`).
+
+    With `return_info=True` the result is a `SaturationResult` that also
+    carries the estimated adaptive-mode truncation error at the returned
+    load (last-iterate vs averaged link loads after a cold `iters`-step
+    solve), so callers can see when `iters` is too low for the bisection
+    tolerance instead of relying on the iters >= 3000 rule of thumb.
     """
     if engine == "batched":
         probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
@@ -317,22 +375,41 @@ def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
                  else _probe_schedule(iters, probes))
         eidx, loads_rep, valid, is_min, first_edge, demand, _ = \
             fp.device_arrays()
-        sat = _saturation_batch(eidx, loads_rep[1:], loads_rep[0], valid,
-                                is_min, first_edge, demand, fp.num_links,
-                                fp.mode, iters, sched)
-        return float(sat)
-    if engine != "scalar":
+        sat = float(_saturation_batch(eidx, loads_rep[1:], loads_rep[0],
+                                      valid, is_min, first_edge, demand,
+                                      fp.num_links, fp.mode, iters, sched))
+    elif engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
-    if evaluate_load(fp, 1.0, iters).max_util <= 1.0:
-        return 1.0
-    lo, hi = 0.0, 1.0
-    while hi - lo > tol:
-        mid = 0.5 * (lo + hi)
-        if evaluate_load(fp, mid, iters).max_util <= 1.0:
-            lo = mid
-        else:
-            hi = mid
-    return lo
+    elif evaluate_load(fp, 1.0, iters).max_util <= 1.0:
+        sat = 1.0
+    else:
+        lo, hi = 0.0, 1.0
+        while hi - lo > tol:
+            mid = 0.5 * (lo + hi)
+            if evaluate_load(fp, mid, iters).max_util <= 1.0:
+                lo = mid
+            else:
+                hi = mid
+        sat = lo
+    if not return_info:
+        return sat
+    return SaturationResult(saturation=sat,
+                            truncation_err=truncation_error(fp, sat, iters))
+
+
+def truncation_error(fp: FlowPaths, offered: float, iters: int = 250) -> float:
+    """Estimated adaptive-mode Frank-Wolfe truncation error at `offered`
+    load: the L-inf gap between last-iterate and averaged link loads after a
+    cold `iters`-step solve (see `SaturationResult`).  0.0 for oblivious
+    modes, whose splits are load-independent fixed points.  Costs one full
+    equilibrium solve -- benchmarks that time the bisection itself should
+    call this outside the timed section."""
+    if fp.mode not in ("ugal", "ugal_pf") or not fp.num_links or offered <= 0:
+        return 0.0
+    eidx, loads_rep, valid, is_min, first_edge, demand, _ = fp.device_arrays()
+    return float(_truncation_gap(eidx, loads_rep[1:], loads_rep[0], valid,
+                                 is_min, first_edge, demand, fp.num_links,
+                                 fp.mode, float(offered), iters))
 
 
 def latency_curve(fp: FlowPaths, loads, iters: int = 250,

@@ -15,8 +15,10 @@ Candidate kinds per routing mode (paper §VII):
 Two engines build identical outputs:
 
   * `engine="vectorized"` (default) -- batched minimal-path extraction via
-    next-hop gathers (`repro.core.routing.minimal_paths`), a dense
-    [n, n] -> directed-edge-id table (`DirectedEdges.table`), and array-level
+    next-hop gathers (`repro.core.routing.minimal_paths`), CSR binary-search
+    edge-id lookups (`DirectedEdges.edge_ids`; no dense [n, n] intermediate
+    anywhere in path construction), destination-blocked ECMP successor
+    tables (`_ECMP_BLOCK_MAX_ENTRIES` entries per block), and array-level
     candidate construction (vectorized intermediates, batched segment
     stitching, vectorized bounce-back filtering).  No Python loop over flows.
   * `engine="reference"` -- the original per-flow scalar loop, kept as the
@@ -41,6 +43,14 @@ from .traffic import TrafficPattern
 __all__ = ["DirectedEdges", "FlowPaths", "build_directed_edges",
            "build_flow_paths", "build_flow_paths_reference"]
 
+# Absolute padded-incidence entry cap for FlowPaths.device_arrays: beyond
+# 4 * nnz the padded gather matrix wastes memory on incidence skew, but up
+# to this many entries (128 MiB of int32) the ~5x gather-vs-scatter-add
+# speed on XLA:CPU is worth the waste -- the scale-tier adaptive solves
+# (e.g. PS(9,61) UGAL_PF, ~18M entries) would otherwise fall onto the
+# serialized scatter path and run ~5x slower per Frank-Wolfe step.
+_INC_PAD_MAX_ENTRIES = 32_000_000
+
 
 @dataclass
 class DirectedEdges:
@@ -49,6 +59,7 @@ class DirectedEdges:
     targets: np.ndarray  # [E_dir]
     num: int
     _table: Optional[np.ndarray] = field(default=None, repr=False)
+    _keys: Optional[np.ndarray] = field(default=None, repr=False)
     _nb_pad: Optional[Tuple[np.ndarray, np.ndarray]] = field(default=None,
                                                              repr=False)
 
@@ -59,7 +70,9 @@ class DirectedEdges:
     @property
     def table(self) -> np.ndarray:
         """Dense [n, n] int32 lookup: table[u, v] = directed edge id, -1 if
-        (u, v) is not an edge.  Built lazily, O(n^2) memory."""
+        (u, v) is not an edge.  Built lazily, O(n^2) memory.  Kept as the
+        small-n reference view; nothing on the path-construction hot path
+        uses it (see `edge_ids`)."""
         if self._table is None:
             n = self.n
             t = -np.ones((n, n), dtype=np.int32)
@@ -68,9 +81,29 @@ class DirectedEdges:
             self._table = t
         return self._table
 
+    @property
+    def keys(self) -> np.ndarray:
+        """[E_dir] int64 sorted key u * n + v per directed edge.  The CSR
+        layout is row-major with sorted neighbor rows, so the edge id of
+        (u, v) is exactly its position in this sorted key array."""
+        if self._keys is None:
+            srcs = np.repeat(np.arange(self.n, dtype=np.int64),
+                             np.diff(self.offsets))
+            self._keys = srcs * self.n + self.targets
+        return self._keys
+
     def edge_ids(self, u: np.ndarray, v: np.ndarray) -> np.ndarray:
-        """Vectorized lookup; -1 where (u, v) is not an edge."""
-        return self.table[u, v]
+        """Vectorized lookup; -1 where (u, v) is not an edge.  A CSR binary
+        search (global searchsorted over the sorted edge keys) -- O(n^2)
+        dense tables are never needed."""
+        qa = np.asarray(u, dtype=np.int64) * self.n + np.asarray(v)
+        if self.num == 0:
+            return np.full(qa.shape, -1, dtype=np.int32)
+        q = qa.ravel()
+        pos = np.searchsorted(self.keys, q)
+        safe = np.minimum(pos, self.num - 1)
+        hit = self.keys[safe] == q
+        return np.where(hit, safe, -1).astype(np.int32).reshape(qa.shape)
 
     def edge_id(self, u: int, v: int) -> int:
         """Scalar fallback (CSR binary search; no dense table needed)."""
@@ -95,11 +128,9 @@ class DirectedEdges:
 
 
 def build_directed_edges(g: Graph) -> DirectedEdges:
-    offsets = np.zeros(g.n + 1, dtype=np.int64)
-    for u in range(g.n):
-        offsets[u + 1] = offsets[u] + len(g.neighbors[u])
-    targets = np.concatenate([nb for nb in g.neighbors]) if g.n else np.zeros(0, np.int32)
-    return DirectedEdges(offsets, targets.astype(np.int32), int(offsets[-1]))
+    # the directed edge id space IS the graph's CSR layout
+    indptr, indices = g.csr
+    return DirectedEdges(indptr, indices, int(indptr[-1]))
 
 
 @dataclass
@@ -149,7 +180,7 @@ class FlowPaths:
             order = np.argsort(e_of, kind="stable")
             counts = np.bincount(e_of, minlength=self.num_links)
             w_max = int(counts.max()) if nnz else 0
-            if self.num_links * w_max <= max(4 * nnz, 2_000_000):
+            if self.num_links * w_max <= max(4 * nnz, _INC_PAD_MAX_ENTRIES):
                 inc = np.full((self.num_links, w_max), f * k, dtype=np.int32)
                 cols = np.concatenate([np.arange(c) for c in counts]) \
                     if nnz else np.zeros(0, dtype=np.int64)
@@ -280,10 +311,12 @@ def _vectorized_cvaliant_select(rt, de, src, dst, keys):
     return np.take_along_axis(nb_s, order, axis=1), cnt
 
 
-# Precomputing the per-(u, d) shortest-path-successor table costs
-# O(n^2 * deg_max) memory; above this many entries fall back to per-hop
-# neighbor gathers instead.
-_ECMP_TABLE_MAX_ENTRIES = 16_000_000
+# Entry budget for one destination block of the shortest-path-successor
+# table: flows are grouped by destination and each block builds a
+# [n, B, deg_max] table, with B sized so the block never exceeds this many
+# entries (memory stays bounded at any graph size; B >= n degenerates to the
+# old whole-table fast path).
+_ECMP_BLOCK_MAX_ENTRIES = 16_000_000
 
 
 def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
@@ -294,47 +327,47 @@ def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
     floor(U[i, c, h] * count) among the neighbors of the current node that
     make progress toward dst[i], in sorted-neighbor order (matching the
     scalar reference exactly).
+
+    Successor tables are destination-blocked: flows are grouped by
+    destination, and each group of B destinations builds
+    succ[u, d_local, j] = j-th neighbor of u on a shortest path toward its
+    destination (CSR neighbor order preserved) plus the matching counts, then
+    walks all of its flows with plain table gathers.  Every flow's walk is
+    independent and consumes its own pre-drawn randomness, so the grouping
+    changes nothing about the output -- it only caps the table memory at
+    `_ECMP_BLOCK_MAX_ENTRIES` entries per block.
     """
     f = len(src)
     nb, _ = de.padded_neighbors()
     n, dmax = nb.shape
     nodes = np.empty((f, k, rt.diameter + 1), dtype=np.int64)
-    cur = np.broadcast_to(src[:, None], (f, k)).copy()
-    nodes[:, :, 0] = cur
-    d_b = np.broadcast_to(dst[:, None], (f, k))
-
-    if n * n * dmax <= _ECMP_TABLE_MAX_ENTRIES:
-        # succ[u, d, j] = j-th neighbor of u on a shortest path to d
-        # (neighbor order preserved); cnt[u, d] = how many there are.
-        present = nb >= 0
-        dist_nb = rt.dist[np.where(present, nb, 0)]  # [n, dmax, n]
-        good = (dist_nb.transpose(0, 2, 1) == (rt.dist - 1)[:, :, None]) \
-            & present[:, None, :]
+    nodes[:, :, 0] = np.broadcast_to(src[:, None], (f, k))
+    present = nb >= 0
+    safe_nb = np.where(present, nb, 0)
+    uniq, inv = np.unique(dst, return_inverse=True)
+    bdst = max(1, _ECMP_BLOCK_MAX_ENTRIES // max(1, n * dmax))
+    for lo in range(0, len(uniq), bdst):
+        dblk = uniq[lo:lo + bdst].astype(np.int64)  # [B] destinations
+        fsel = np.flatnonzero((inv >= lo) & (inv < lo + len(dblk)))
+        # succ[u, d_local, j] / cnt[u, d_local] for this destination block
+        dist_nb = rt.dist[safe_nb[:, :, None], dblk[None, None, :]]  # [n,dmax,B]
+        good = (dist_nb.transpose(0, 2, 1)
+                == (rt.dist[:, dblk] - 1)[:, :, None]) & present[:, None, :]
         cnt_t = good.sum(axis=2).astype(np.int64)
         order = np.argsort(~good, axis=2, kind="stable")  # good slots first
         succ = np.take_along_axis(
             np.broadcast_to(nb[:, None, :], good.shape), order, axis=2)
+        fb = len(fsel)
+        cur = np.broadcast_to(src[fsel][:, None], (fb, k)).copy().astype(np.int64)
+        d_b = np.broadcast_to(dst[fsel][:, None], (fb, k))
+        l_b = np.broadcast_to((inv[fsel] - lo)[:, None], (fb, k))
+        walk = np.empty((fb, k, rt.diameter), dtype=np.int64)
         for h in range(rt.diameter):
             active = cur != d_b
-            j = np.floor(u_draw[:, :, h] * cnt_t[cur, d_b]).astype(np.int64)
-            cur = np.where(active, succ[cur, d_b, j], cur).astype(np.int64)
-            nodes[:, :, h + 1] = cur
-        return nodes
-
-    for h in range(rt.diameter):
-        active = cur != d_b
-        nb_cur = nb[cur]  # [F, K, dmax]
-        present = nb_cur >= 0
-        safe = np.where(present, nb_cur, 0)
-        good = present & (rt.dist[safe, d_b[:, :, None]]
-                          == (rt.dist[cur, d_b] - 1)[:, :, None])
-        cnt = good.sum(axis=2)
-        j = np.floor(u_draw[:, :, h] * cnt).astype(np.int64)
-        # position of the (j+1)-th good neighbor
-        pos = np.argmax(np.cumsum(good, axis=2) == (j + 1)[:, :, None], axis=2)
-        nxt = np.take_along_axis(nb_cur, pos[:, :, None], axis=2)[:, :, 0]
-        cur = np.where(active, nxt, cur).astype(np.int64)
-        nodes[:, :, h + 1] = cur
+            j = np.floor(u_draw[fsel, :, h] * cnt_t[cur, l_b]).astype(np.int64)
+            cur = np.where(active, succ[cur, l_b, j], cur).astype(np.int64)
+            walk[:, :, h] = cur
+        nodes[fsel, :, 1:] = walk
     return nodes
 
 
