@@ -16,6 +16,11 @@ engine can route (dense [n, n] frontier expansion is O(n^3) per hop):
   PF(79)     6321 routers, radix 80
   JF(6321)   6321 routers, radix 80  (Jellyfish at PF(79)-matched radix)
 
+The scale tier routes through `build_blocked_routing` + the
+destination-blocked path builder: no [n, n] distance or next-hop table is
+ever materialized, so its fluid-throughput points fit the 2 GiB envelope
+that tests/test_blocked_paths.py asserts (the dense builder's wall).
+
 Under BENCH_SMOKE=1 the sweep shrinks to PF(7) plus one sparse-engine
 PS(7, 49) min-routing point (n = 2793 is above the dense-engine threshold,
 so `build_routing` auto-selects the blocked BFS), keeping the sparse path
@@ -24,7 +29,7 @@ estimate (`fw_err`) alongside the saturation.
 """
 from repro.core import topologies as tp
 from repro.core.polarfly import build_polarfly
-from repro.core.routing import build_routing
+from repro.core.routing import build_blocked_routing, build_routing
 from repro.simulation import (build_flow_paths, make_pattern,
                               saturation_throughput, truncation_error)
 
@@ -32,30 +37,35 @@ from .common import emit, fw_iters, large, smoke, timed
 
 
 def _configs():
-    """Yields (name, graph, pf, endpoints_per_router, modes)."""
+    """Yields (name, graph, pf, endpoints_per_router, modes, blocked)."""
     for q in (7,) if smoke() else (13, 19, 25, 31, 37, 43):
         pf = build_polarfly(q)
-        yield f"pf{q}", pf.graph, pf, (q + 1) // 2, ("min", "ugal_pf")
+        yield f"pf{q}", pf.graph, pf, (q + 1) // 2, ("min", "ugal_pf"), False
     if smoke():
         g = tp.build_polarstar(7, 49)
-        yield "ps7x49", g, None, g.params["radix"] // 2, ("min",)
+        yield "ps7x49", g, None, g.params["radix"] // 2, ("min",), False
         return
     for name, g in (("sf23", tp.build_slimfly(23)),
                     ("sf27", tp.build_slimfly(27)),
                     ("ps7x49", tp.build_polarstar(7, 49))):
-        yield name, g, None, g.params["radix"] // 2, ("min", "ugal_pf")
+        yield name, g, None, g.params["radix"] // 2, ("min", "ugal_pf"), False
     if large():
         for name, g in (("ps9x61", tp.build_polarstar(9, 61)),
                         ("sf43", tp.build_slimfly(43)),
                         ("pf79", build_polarfly(79).graph),
                         ("jf6321", tp.build_jellyfish(6321, 80, seed=0))):
-            yield name, g, None, g.params["radix"] // 2, ("min", "ugal_pf")
+            yield (name, g, None, g.params["radix"] // 2,
+                   ("min", "ugal_pf"), True)
 
 
 def run():
-    for name, g, pf, p, modes in _configs():
-        rt, rus = timed(lambda: build_routing(g, pf))
-        emit(f"fig10.{name}.routing", rus, f"N={g.n};diam={rt.diameter}")
+    for name, g, pf, p, modes, blocked in _configs():
+        if blocked:
+            rt, rus = timed(lambda: build_blocked_routing(g))
+        else:
+            rt, rus = timed(lambda: build_routing(g, pf))
+        emit(f"fig10.{name}.routing", rus,
+             f"N={g.n};diam={rt.diameter};blocked={int(blocked)}")
         for mode in modes:
             # exact all-pairs for min (single path per flow) up to the
             # PF(43)/SF(27) sizes; larger graphs and the adaptive mode

@@ -2,13 +2,40 @@
 
 BENCH_LARGE=1 adds scale-tier graphs whose sweeps stream through the sparse
 blocked-BFS engine (diameter/ASPL never materializes an [n, n] table there),
-at a shorter failure-fraction list to keep the tier's n * E BFS cost sane.
+at a shorter failure-fraction list to keep the tier's n * E BFS cost sane --
+plus one *throughput*-under-failure point: PS(9, 61) with 5% of links
+removed, routed by the destination-blocked path builder on
+`build_blocked_routing` state (host-restricted sampled flows; no [n, n]
+table anywhere).
 """
+import numpy as np
+
 from repro.core import topologies as tp
 from repro.core.metrics import resilience_sweep
 from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_blocked_routing
+from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
 
 from .common import emit, large, timed
+
+
+def _run_large_fluid():
+    """Saturation on a 5%-damaged PS(9, 61) through the blocked stack."""
+    g = tp.build_polarstar(9, 61)
+    rng = np.random.default_rng(1)
+    edges = g.edge_list
+    drop = edges[rng.choice(len(edges), int(0.05 * len(edges)),
+                            replace=False)]
+    dg = g.subgraph_without_edges(drop)
+    rt, rus = timed(lambda: build_blocked_routing(dg))
+    emit("fig14.fluid.PS9x61.f5.routing", rus,
+         f"N={dg.n};diam={rt.diameter};blocked=1")
+    hosts = np.arange(512, dtype=np.int32)
+    pat = make_pattern("uniform", rt, p=20, hosts=hosts, seed=0)
+    fp, pus = timed(lambda: build_flow_paths(rt, pat, "min", seed=0))
+    emit("fig14.fluid.PS9x61.f5.min.paths", pus, f"F={pat.num_flows}")
+    sat, us = timed(lambda: saturation_throughput(fp, tol=0.02))
+    emit("fig14.fluid.PS9x61.f5.min", us, f"sat={sat:.3f}")
 
 
 def run():
@@ -27,6 +54,8 @@ def run():
         summary = ";".join(f"f{int(p.fail_fraction*100)}:d={p.diameter}"
                            for p in pts)
         emit(f"fig14.resilience.{name}", us, summary)
+    if large():
+        _run_large_fluid()
 
 
 if __name__ == "__main__":

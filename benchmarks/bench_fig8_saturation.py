@@ -1,15 +1,21 @@
 """Fig. 8 / Table V: saturation throughput across topologies x patterns x
 routing.  Scaled configuration (q=13-class, ~200 routers, p:radix = 1:2) --
 the paper's own Fig. 10 shows PolarFly behavior is size-stable.  Saturation
-runs on the batched (in-jit bisection) fluid engine."""
+runs on the batched (in-jit bisection) fluid engine.
+
+BENCH_LARGE=1 adds a PF(79) point (6321 routers, radix 80) whose paths are
+built by the destination-blocked engine on `build_blocked_routing` state:
+random-permutation traffic at sampled-flow scale, min + UGAL_PF, with no
+[n, n] table anywhere (the 2 GiB envelope asserted by
+tests/test_blocked_paths.py)."""
 import numpy as np
 
 from repro.core import topologies as tp
 from repro.core.polarfly import build_polarfly
-from repro.core.routing import build_routing
+from repro.core.routing import build_blocked_routing, build_routing
 from repro.simulation import build_flow_paths, make_pattern, saturation_throughput
 
-from .common import emit, fw_iters, smoke, timed
+from .common import emit, fw_iters, large, smoke, timed
 
 CONFIGS = {
     "PF": lambda: (build_polarfly(13).graph, build_polarfly(13)),
@@ -23,6 +29,25 @@ SMOKE_CONFIGS = {
     "PF": lambda: (build_polarfly(7).graph, build_polarfly(7)),
     "DF1": lambda: (tp.build_dragonfly(4, 2), None),
 }
+
+
+def _run_large():
+    """PF(79) through the blocked stack: adversarial permutation,
+    sampled uniform demand, min + UGAL_PF."""
+    g = build_polarfly(79).graph
+    rt, rus = timed(lambda: build_blocked_routing(g))
+    emit("fig8.PF79.routing", rus, f"N={g.n};diam={rt.diameter};blocked=1")
+    p = g.params.get("radix", 80) // 2
+    for pattern, mf in (("uniform", 60_000), ("random_perm", 60_000)):
+        pat = make_pattern(pattern, rt, p=p, seed=0, max_flows=mf)
+        for mode in ("min", "ugal_pf"):
+            fp, pus = timed(lambda: build_flow_paths(
+                rt, pat, mode, k_candidates=10, seed=0))  # auto -> blocked
+            emit(f"fig8.PF79.{pattern}.{mode}.paths", pus,
+                 f"F={pat.num_flows}")
+            sat, us = timed(lambda: saturation_throughput(
+                fp, tol=0.01, iters=fw_iters(mode), engine="batched"))
+            emit(f"fig8.PF79.{pattern}.{mode}", us, f"sat={sat:.3f}")
 
 
 def run():
@@ -45,6 +70,8 @@ def run():
                 sat, us = timed(lambda: saturation_throughput(
                     fp, tol=0.01, iters=fw_iters(mode), engine="batched"))
                 emit(f"fig8.{name}.{pattern}.{mode}", us, f"sat={sat:.3f}")
+    if large() and not smoke():
+        _run_large()
 
 
 if __name__ == "__main__":

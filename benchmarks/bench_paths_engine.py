@@ -1,8 +1,11 @@
-"""Vectorized vs scalar-reference flow-path construction (all six routing
-modes) on PF(13) uniform -- the acceptance benchmark for the batched engine.
-Outputs per-mode build time for both engines and the speedup factor."""
+"""Dense-vectorized vs destination-blocked vs scalar-reference flow-path
+construction (all six routing modes) on PF(13) uniform -- the acceptance
+benchmark for the batched engines.  Outputs per-mode build time for every
+engine and the speedup factor over the scalar spec; the blocked rows run on
+`build_blocked_routing` state, so they also price the per-block BFS that
+replaces the dense next-hop table."""
 from repro.core.polarfly import build_polarfly
-from repro.core.routing import build_routing
+from repro.core.routing import build_blocked_routing, build_routing
 from repro.simulation import (build_flow_paths, build_flow_paths_reference,
                               make_pattern)
 
@@ -14,20 +17,28 @@ MODES = ("min", "ecmp", "valiant", "cvaliant", "ugal", "ugal_pf")
 def run():
     pf = build_polarfly(13)
     rt = build_routing(pf.graph, pf)
+    br = build_blocked_routing(pf.graph)
     pat = make_pattern("uniform", rt, p=7, seed=0)
-    t_vec_total = t_ref_total = 0.0
+    t_vec_total = t_ref_total = t_blk_total = 0.0
     for mode in MODES:
         _, us_vec = timed(lambda: build_flow_paths(
-            rt, pat, mode, k_candidates=8, seed=0))
+            rt, pat, mode, k_candidates=8, seed=0, engine="dense"))
+        _, us_blk = timed(lambda: build_flow_paths(
+            br, pat, mode, k_candidates=8, seed=0, engine="blocked"))
         _, us_ref = timed(lambda: build_flow_paths_reference(
             rt, pat, mode, k_candidates=8, seed=0))
         t_vec_total += us_vec
+        t_blk_total += us_blk
         t_ref_total += us_ref
         emit(f"paths.pf13.{mode}.vectorized", us_vec,
              f"F={pat.num_flows};speedup={us_ref / us_vec:.1f}x")
+        emit(f"paths.pf13.{mode}.blocked", us_blk,
+             f"F={pat.num_flows};speedup={us_ref / us_blk:.1f}x")
         emit(f"paths.pf13.{mode}.reference", us_ref, f"F={pat.num_flows}")
     emit("paths.pf13.total.vectorized", t_vec_total,
          f"speedup={t_ref_total / t_vec_total:.1f}x")
+    emit("paths.pf13.total.blocked", t_blk_total,
+         f"speedup={t_ref_total / t_blk_total:.1f}x")
 
 
 if __name__ == "__main__":

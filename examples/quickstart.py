@@ -1,7 +1,14 @@
 """Quickstart: build PolarFly, inspect its structure, route, expand.
 
   PYTHONPATH=src python examples/quickstart.py [q]
+
+Defaults to PF(17); under BENCH_SMOKE=1 (the CI knob the benchmarks also
+use) it shrinks to PF(7) so the script doubles as a smoke test.  Every
+engine-backed call goes through its `engine="auto"` default: the CSR-first
+sparse engines take over automatically above the dense thresholds, so the
+same script scales from PF(7) to PF(79) unchanged.
 """
+import os
 import sys
 
 from repro.core.expansion import expand
@@ -12,12 +19,15 @@ from repro.core.routing import build_routing, minimal_path
 
 
 def main():
-    q = int(sys.argv[1]) if len(sys.argv) > 1 else 17
+    smoke = os.environ.get("BENCH_SMOKE", "0") not in ("", "0")
+    q = int(sys.argv[1]) if len(sys.argv) > 1 else (7 if smoke else 17)
     pf = build_polarfly(q)
-    diam, aspl = diameter_and_aspl(pf.graph)
+    indptr, indices = pf.graph.csr  # the cached CSR view every engine shares
+    diam, aspl = diameter_and_aspl(pf.graph)  # engine="auto": dense or blocked BFS by size
     print(f"PolarFly ER_{q}: N={pf.n} radix={pf.degree} diameter={diam} "
           f"ASPL={aspl:.3f} MooreEff={moore_efficiency(pf.n, pf.degree):.3f}")
     print(f"  quadrics |W|={len(pf.quadrics)}  |V1|={len(pf.v1)}  |V2|={len(pf.v2)}")
+    print(f"  CSR view: {len(indptr) - 1} rows, {len(indices)} directed edges")
     print(f"  triangles={triangle_census(pf.graph)}  "
           f"bisection cut fraction={bisection_fraction(pf.graph):.3f}")
 
@@ -26,6 +36,9 @@ def main():
     print(f"  layout: {lay.num_clusters} racks; quadric-rack links={m[0,1]} "
           f"per rack; rack-to-rack links={m[1,2]} (paper: q+1={q+1}, q-2={q-2})")
 
+    # engine="auto" picks the dense reference below n = 2048 and the blocked
+    # sparse BFS above; at thousands of routers, build_blocked_routing
+    # (repro.core.routing) skips the [n, n] tables entirely.
     rt = build_routing(pf.graph, pf)
     s, d = 0, pf.n // 2
     print(f"  min route {s}->{d}: {minimal_path(rt.next_hop, s, d)} "

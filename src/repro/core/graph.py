@@ -79,6 +79,21 @@ class Graph:
         return a
 
     @functools.cached_property
+    def padded_neighbors(self) -> Tuple[np.ndarray, np.ndarray]:
+        """([n, deg_max] int32 sorted-neighbor matrix padded with -1,
+        [n] int64 degrees).  The ragged-to-rectangular view the
+        destination-blocked routing columns and the simulator's candidate
+        builders gather from; cached once per graph."""
+        indptr, indices = self.csr
+        deg = self.degrees
+        dmax = int(deg.max()) if self.n else 0
+        nb = np.full((self.n, dmax), -1, dtype=np.int32)
+        if dmax:
+            cols = np.arange(len(indices)) - np.repeat(indptr[:-1], deg)
+            nb[self._csr_rows, cols] = indices
+        return nb, deg.astype(np.int64)
+
+    @functools.cached_property
     def edge_list(self) -> np.ndarray:
         """[E, 2] int32, u < v, sorted lexicographically."""
         _, indices = self.csr

@@ -47,6 +47,20 @@ vertices and sparse above; both produce identical int16 distances (with
 tables, on intact and damaged graphs.  `distance_blocks` additionally exposes
 the sparse engine as a streaming iterator so metrics (diameter / ASPL,
 resilience sweeps) never need to materialize an [n, n] table at all.
+
+Destination-blocked consumption
+-------------------------------
+The flow-path builders walk next hops *toward* a flow's destination, i.e.
+they consume next-hop table **columns** ``nh[:, d]``, not the rows the
+source-blocked BFS produces.  `destination_blocks` serves exactly that view:
+for a block of B destinations it BFSes *from* the destinations (distances
+are symmetric on undirected graphs) and derives each column as the first
+sorted neighbor at distance - 1 -- bit-identical to ``next_hop_table(g)[:,
+dests]`` -- in O(B * (n + E) + B * n * deg_max) working memory.
+`BlockedRouting` (`build_blocked_routing`) packages this as a routing state
+with no [n, n] table at all, which is what retires the dense next-hop table
+as the simulator's last [n, n] consumer (see repro.simulation.paths,
+``engine="blocked"``).
 """
 
 from __future__ import annotations
@@ -65,7 +79,12 @@ __all__ = [
     "bfs_block_size",
     "bfs_peak_bytes",
     "distance_blocks",
+    "destination_blocks",
+    "dest_block_size",
+    "dest_block_peak_bytes",
     "sparse_routing_tables",
+    "BlockedRouting",
+    "build_blocked_routing",
     "all_pairs_distances",
     "next_hop_table",
     "polarfly_next_hop_table",
@@ -215,6 +234,144 @@ def sparse_routing_tables(g: Graph, block: Optional[int] = None,
     return dist, nh
 
 
+# ----------------------------------------------------------------------------
+# destination-blocked next-hop columns (the flow-path builders' view)
+# ----------------------------------------------------------------------------
+
+def _dest_bytes_per_target(n: int, e_dir: int, deg_max: int) -> int:
+    """Working-set estimate for one destination column.
+
+    Per destination: the BFS source row (distances are symmetric, so the
+    column's distance data comes from a BFS rooted at the destination) plus
+    the column derivation's [n, deg_max] neighbor-distance gather (int16) and
+    goodness mask (bool), plus the int16 distance / int32 next-hop output
+    columns.
+    """
+    return (_bfs_bytes_per_source(n, e_dir)
+            + 3 * max(n, 1) * max(deg_max, 1) + 6 * max(n, 1))
+
+
+def dest_block_size(n: int, e_dir: int, deg_max: int,
+                    budget_bytes: int = _BFS_BUDGET_BYTES) -> int:
+    """Destinations per `destination_blocks` batch so the working set fits
+    `budget_bytes`; at least 1, at most n (same contract as
+    `bfs_block_size`)."""
+    per = _dest_bytes_per_target(n, e_dir, deg_max)
+    return int(min(max(n, 1), max(1, budget_bytes // max(per, 1))))
+
+
+def dest_block_peak_bytes(n: int, e_dir: int, deg_max: int,
+                          block: int) -> int:
+    """Estimated peak transient bytes of one destination block (no [n, n]
+    output exists on this path -- consumers hold per-flow arrays only)."""
+    return block * _dest_bytes_per_target(n, e_dir, deg_max)
+
+
+def _next_hop_columns(nb: np.ndarray, dests: np.ndarray,
+                      dist_rows: np.ndarray) -> np.ndarray:
+    """Next-hop columns toward each destination of a block.
+
+    `dist_rows` is [B, n] int16 from a BFS rooted at each destination (equal
+    to dist[:, dests].T on an undirected graph).  Returns [n, B] int32 where
+    column b holds nh[:, dests[b]]: for every u the lowest-id neighbor v with
+    dist(v, d) == dist(u, d) - 1, which is exactly the dense
+    `next_hop_table`'s argmin-with-first-occurrence tie break (neighbor rows
+    are sorted).  nh[d, d] = d; unreachable -> UNREACHABLE.
+    """
+    b, n = dist_rows.shape
+    rows_b = np.arange(b)
+    if nb.shape[1] == 0:  # edge-free graph: only the diagonal is routable
+        nh = np.full((b, n), UNREACHABLE, dtype=np.int32)
+        nh[rows_b, dests] = dests
+        return np.ascontiguousarray(nh.T)
+    present = nb >= 0
+    safe_nb = np.where(present, nb, 0)
+    dist_nb = dist_rows[:, safe_nb]  # [B, n, deg_max]
+    # dist_rows > 0 excludes u == d (want would be -1, matching unreachable
+    # neighbors) and unreachable u (want would be -2)
+    good = ((dist_nb == (dist_rows - np.int16(1))[:, :, None])
+            & present[None, :, :] & (dist_rows > 0)[:, :, None])
+    any_good = good.any(axis=2)
+    first = good.argmax(axis=2)  # [B, n] first good slot = lowest-id neighbor
+    nh = np.where(any_good, nb[np.arange(n)[None, :], first],
+                  np.int32(UNREACHABLE)).astype(np.int32)
+    nh[rows_b, dests] = dests
+    return np.ascontiguousarray(nh.T)
+
+
+def destination_blocks(g: Graph, dests: Optional[np.ndarray] = None,
+                       block: Optional[int] = None,
+                       budget_bytes: int = _BFS_BUDGET_BYTES,
+                       ) -> Iterator[Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]]:
+    """Stream routing state one destination block at a time: yields
+    (dests_blk, dist_cols [n, B] int16, nh_cols [n, B] int32).
+
+    `dist_cols[:, b]` / `nh_cols[:, b]` are bit-identical to the dense
+    ``all_pairs_distances(g)[:, dests_blk[b]]`` /
+    ``next_hop_table(g)[:, dests_blk[b]]`` columns; only destinations that
+    appear in `dests` (default: all n) are ever computed, so sampled-flow
+    workloads pay for the destinations they use and nothing else.
+    """
+    indptr, indices = g.csr
+    nb, _ = g.padded_neighbors
+    if dests is None:
+        dests = np.arange(g.n, dtype=np.int64)
+    dests = np.asarray(dests, dtype=np.int64).ravel()
+    if block is None:
+        block = dest_block_size(g.n, len(indices), nb.shape[1], budget_bytes)
+    for lo in range(0, len(dests), block):
+        dblk = dests[lo:lo + block]
+        dist_rows, _ = _bfs_block(indptr, indices, dblk, False)
+        yield (dblk, np.ascontiguousarray(dist_rows.T),
+               _next_hop_columns(nb, dblk, dist_rows))
+
+
+@dataclass
+class BlockedRouting:
+    """Routing state for the destination-blocked flow-path builder.
+
+    Unlike `RoutingTables` there is no [n, n] table anywhere: next-hop
+    columns are recomputed per destination block from the blocked BFS, so
+    the resident state is the graph plus two integers.  Shares the
+    `dest_blocks` iteration protocol with `RoutingTables` (which serves the
+    same blocks by slicing its dense tables), so
+    ``build_flow_paths(engine="blocked")`` accepts either.
+    """
+
+    graph: Graph
+    diameter: int
+    block: int  # default destinations per block
+
+    def dest_blocks(self, dests: Optional[np.ndarray] = None,
+                    block: Optional[int] = None,
+                    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        return destination_blocks(self.graph, dests,
+                                  self.block if block is None else block)
+
+
+def build_blocked_routing(g: Graph, block: Optional[int] = None,
+                          budget_bytes: int = _BFS_BUDGET_BYTES,
+                          ) -> BlockedRouting:
+    """Streaming counterpart of `build_routing`: computes the diameter via
+    `distance_blocks` (never holding an [n, n] table) and returns a
+    `BlockedRouting` whose per-block working set fits `budget_bytes`.
+
+    Same disconnected-graph semantics as `build_routing`: the diameter is
+    the largest *finite* distance (UNREACHABLE = -1 never wins the max), and
+    path extraction through the blocked builder raises on unreachable
+    pairs.
+    """
+    diam = 0
+    for _, db, _ in distance_blocks(g, budget_bytes=budget_bytes):
+        diam = max(diam, int(db.max()))
+    if block is None:
+        _, indices = g.csr
+        block = dest_block_size(g.n, len(indices),
+                                g.padded_neighbors[0].shape[1], budget_bytes)
+    return BlockedRouting(graph=g, diameter=diam, block=block)
+
+
 def _resolve_engine(engine: str, n: int) -> str:
     if engine == "auto":
         return "dense" if n <= _DENSE_MAX_N else "sparse"
@@ -334,6 +491,25 @@ class RoutingTables:
         """Batched minimal paths: [F, diameter + 1] node ids (see
         `minimal_paths`)."""
         return minimal_paths(self.next_hop, src, dst, self.diameter)
+
+    def dest_blocks(self, dests: Optional[np.ndarray] = None,
+                    block: Optional[int] = None,
+                    ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """`BlockedRouting`-compatible destination-block iteration, served
+        by slicing the dense tables.  Fancy indexing copies the selected
+        columns, so each yielded block transiently duplicates
+        O(block * n * 6) bytes of already-materialized state; the default
+        single block is fine for the small-n graphs RoutingTables targets,
+        and memory-conscious consumers (the blocked path builder) always
+        pass an explicit bounded `block`."""
+        if dests is None:
+            dests = np.arange(self.graph.n, dtype=np.int64)
+        dests = np.asarray(dests, dtype=np.int64).ravel()
+        if block is None:
+            block = max(len(dests), 1)
+        for lo in range(0, len(dests), block):
+            dblk = dests[lo:lo + block]
+            yield dblk, self.dist[:, dblk], self.next_hop[:, dblk]
 
 
 def build_routing(g: Graph, pf: Optional[PolarFly] = None,

@@ -327,6 +327,21 @@ def _truncation_gap(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
     return jnp.max(jnp.abs(loads(split, d) - acc / iters))
 
 
+def _as_flow_paths(fp) -> FlowPaths:
+    """Normalize the `fp` argument of every public entry point: a single
+    FlowPaths passes through; a sequence of chunks (e.g. assembled one
+    destination block or traffic shard at a time by the blocked path
+    builder) is concatenated via `FlowPaths.concat`.  Callers issuing many
+    solver calls should concatenate once themselves so the device-array
+    cache persists across calls."""
+    if isinstance(fp, FlowPaths):
+        return fp
+    if isinstance(fp, (list, tuple)):
+        return FlowPaths.concat(fp)
+    raise TypeError(f"expected FlowPaths or a sequence of them, got "
+                    f"{type(fp).__name__}")
+
+
 def _run(fp: FlowPaths, offered: float, iters: int):
     # device_arrays() is cached on the FlowPaths, so the repeated probes of
     # saturation bisection / latency sweeps skip the preprocessing and the
@@ -337,7 +352,8 @@ def _run(fp: FlowPaths, offered: float, iters: int):
                   iters)
 
 
-def evaluate_load(fp: FlowPaths, offered: float, iters: int = 250) -> FluidResult:
+def evaluate_load(fp, offered: float, iters: int = 250) -> FluidResult:
+    fp = _as_flow_paths(fp)
     split, rho, cost = _run(fp, offered, iters)
     split = np.asarray(split)
     rho = np.asarray(rho)
@@ -352,11 +368,12 @@ def evaluate_load(fp: FlowPaths, offered: float, iters: int = 250) -> FluidResul
                        max_util=max_util, mean_latency=lat, mean_hops=hops)
 
 
-def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
+def saturation_throughput(fp, tol: float = 0.005,
                           iters: int = 250, engine: str = "batched",
                           probe_iters: int = 0, return_info: bool = False):
     """Largest per-endpoint offered load with max link utilization <= 1
-    (bisection; adaptive splits re-equilibrate at every probe).
+    (bisection; adaptive splits re-equilibrate at every probe).  `fp` is a
+    FlowPaths or a sequence of FlowPaths chunks (concatenated on entry).
 
     engine="batched" (default) runs the whole bisection inside one jit with
     warm-started probes; engine="scalar" is the per-probe reference.
@@ -369,6 +386,7 @@ def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
     solve), so callers can see when `iters` is too low for the bisection
     tolerance instead of relying on the iters >= 3000 rule of thumb.
     """
+    fp = _as_flow_paths(fp)
     if engine == "batched":
         probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
         sched = ((probe_iters,) * probes if probe_iters > 0
@@ -397,13 +415,14 @@ def saturation_throughput(fp: FlowPaths, tol: float = 0.005,
                             truncation_err=truncation_error(fp, sat, iters))
 
 
-def truncation_error(fp: FlowPaths, offered: float, iters: int = 250) -> float:
+def truncation_error(fp, offered: float, iters: int = 250) -> float:
     """Estimated adaptive-mode Frank-Wolfe truncation error at `offered`
     load: the L-inf gap between last-iterate and averaged link loads after a
     cold `iters`-step solve (see `SaturationResult`).  0.0 for oblivious
     modes, whose splits are load-independent fixed points.  Costs one full
     equilibrium solve -- benchmarks that time the bisection itself should
     call this outside the timed section."""
+    fp = _as_flow_paths(fp)
     if fp.mode not in ("ugal", "ugal_pf") or not fp.num_links or offered <= 0:
         return 0.0
     eidx, loads_rep, valid, is_min, first_edge, demand, _ = fp.device_arrays()
@@ -412,11 +431,13 @@ def truncation_error(fp: FlowPaths, offered: float, iters: int = 250) -> float:
                                  fp.mode, float(offered), iters))
 
 
-def latency_curve(fp: FlowPaths, loads, iters: int = 250,
+def latency_curve(fp, loads, iters: int = 250,
                   engine: str = "batched") -> List[FluidResult]:
     """FluidResult per offered load.  engine="batched" (default) evaluates
     every load in one compiled vmapped call; engine="scalar" dispatches
-    `evaluate_load` per load (the reference)."""
+    `evaluate_load` per load (the reference).  `fp` may be a sequence of
+    FlowPaths chunks (concatenated on entry)."""
+    fp = _as_flow_paths(fp)
     loads = [float(l) for l in loads]
     if engine == "batched":
         eidx, loads_rep, valid, is_min, first_edge, demand, hops = \

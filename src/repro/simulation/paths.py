@@ -12,36 +12,52 @@ Candidate kinds per routing mode (paper §VII):
   ugal     -- {min} + valiant candidates (queue-adaptive choice in solver).
   ugal_pf  -- {min} + cvaliant candidates + 2/3 threshold gate in solver.
 
-Two engines build identical outputs:
+Three engines build identical outputs:
 
-  * `engine="vectorized"` (default) -- batched minimal-path extraction via
-    next-hop gathers (`repro.core.routing.minimal_paths`), CSR binary-search
-    edge-id lookups (`DirectedEdges.edge_ids`; no dense [n, n] intermediate
-    anywhere in path construction), destination-blocked ECMP successor
+  * `engine="dense"` (alias `"vectorized"`, the pre-PR-4 name) -- batched
+    minimal-path extraction via next-hop gathers over the dense [n, n]
+    table (`repro.core.routing.minimal_paths`), CSR binary-search edge-id
+    lookups (`DirectedEdges.edge_ids`), destination-blocked ECMP successor
     tables (`_ECMP_BLOCK_MAX_ENTRIES` entries per block), and array-level
     candidate construction (vectorized intermediates, batched segment
-    stitching, vectorized bounce-back filtering).  No Python loop over flows.
+    stitching, vectorized bounce-back filtering).  No Python loop over
+    flows.  Kept as the small-n reference engine; requires a
+    `RoutingTables`.
+  * `engine="blocked"` -- the scale engine: candidate sets are built one
+    destination block at a time from next-hop *columns*
+    (`dest_blocks` on `RoutingTables` / `BlockedRouting`), so no [n, n]
+    table is ever required.  Flows group by destination (the
+    `_ECMP_BLOCK_MAX_ENTRIES` machinery); min / ECMP / CValiant walks
+    route toward in-block destinations directly, and Valiant s->r segments
+    re-group by random intermediate for a second sweep of column blocks.
+    Only per-flow path arrays ever reach `FlowPaths`
+    (`blocked_paths_peak_bytes` estimates the envelope).
   * `engine="reference"` -- the original per-flow scalar loop, kept as the
     executable specification.
 
-Both engines consume the same pre-drawn randomness (`_draw_randomness`), so
-for any (pattern, mode, k, seed) they produce bit-identical
-edges/hops/valid/is_min/first_edge -- see tests/test_simulation.py.
+`engine="auto"` (the default) picks "dense" when the routing state carries
+dense tables (`RoutingTables`) and "blocked" when it streams
+(`BlockedRouting`).  All engines consume the same pre-drawn randomness
+(`_draw_randomness`), so for any (pattern, mode, k, seed) they produce
+bit-identical edges/hops/valid/is_min/first_edge -- see
+tests/test_simulation.py and tests/test_blocked_paths.py.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.graph import Graph
-from ..core.routing import RoutingTables, minimal_path, minimal_paths
+from ..core.graph import Graph, UNREACHABLE
+from ..core.routing import (RoutingTables, dest_block_peak_bytes,
+                            minimal_path, minimal_paths)
 from .traffic import TrafficPattern
 
 __all__ = ["DirectedEdges", "FlowPaths", "build_directed_edges",
-           "build_flow_paths", "build_flow_paths_reference"]
+           "build_flow_paths", "build_flow_paths_reference",
+           "blocked_paths_peak_bytes"]
 
 # Absolute padded-incidence entry cap for FlowPaths.device_arrays: beyond
 # 4 * nnz the padded gather matrix wastes memory on incidence skew, but up
@@ -114,23 +130,29 @@ class DirectedEdges:
         return int(self.offsets[u] + i)
 
     def padded_neighbors(self) -> Tuple[np.ndarray, np.ndarray]:
-        """([n, deg_max] int32 neighbor matrix padded with -1, [n] degrees)."""
+        """([n, deg_max] int32 neighbor matrix padded with -1, [n] degrees).
+
+        `build_directed_edges` seeds this from `Graph.padded_neighbors`
+        (cached once per graph); the fallback below only runs for
+        hand-constructed instances."""
         if self._nb_pad is None:
             deg = np.diff(self.offsets)
             dmax = int(deg.max()) if len(deg) else 0
             nb = -np.ones((self.n, dmax), dtype=np.int32)
-            rows = np.repeat(np.arange(self.n), deg)
-            cols = np.concatenate([np.arange(d) for d in deg]) if self.num \
-                else np.zeros(0, dtype=np.int64)
-            nb[rows, cols] = self.targets
+            if dmax:
+                rows = np.repeat(np.arange(self.n), deg)
+                cols = np.arange(self.num) - np.repeat(self.offsets[:-1], deg)
+                nb[rows, cols] = self.targets
             self._nb_pad = (nb, deg.astype(np.int64))
         return self._nb_pad
 
 
 def build_directed_edges(g: Graph) -> DirectedEdges:
-    # the directed edge id space IS the graph's CSR layout
+    # the directed edge id space IS the graph's CSR layout; the padded
+    # neighbor view is shared with the graph's per-instance cache
     indptr, indices = g.csr
-    return DirectedEdges(indptr, indices, int(indptr[-1]))
+    return DirectedEdges(indptr, indices, int(indptr[-1]),
+                         _nb_pad=g.padded_neighbors)
 
 
 @dataclass
@@ -196,6 +218,46 @@ class FlowPaths:
                             jnp.asarray(self.pattern.demand),
                             jnp.asarray(self.hops))
         return self._device
+
+    @classmethod
+    def concat(cls, chunks: Sequence["FlowPaths"]) -> "FlowPaths":
+        """Assemble one FlowPaths from chunks built over disjoint flow
+        batches of the same graph / mode / candidate count (pad widths may
+        differ; shorter chunks are -1-padded up).
+
+        This is the incremental-assembly hook for the blocked builder:
+        callers can construct paths one traffic shard at a time and either
+        concatenate explicitly or hand the chunk list straight to any fluid
+        entry point (`evaluate_load`, `saturation_throughput`,
+        `latency_curve`, `truncation_error`), which normalizes through this
+        method.
+        """
+        chunks = list(chunks)
+        if not chunks:
+            raise ValueError("no FlowPaths chunks to concatenate")
+        first = chunks[0]
+        if len(chunks) == 1:
+            return first
+        if any(c.mode != first.mode or c.num_links != first.num_links
+               or c.edges.shape[1] != first.edges.shape[1] for c in chunks):
+            raise ValueError(
+                "FlowPaths chunks disagree on mode / link space / candidates")
+        lmax = max(c.edges.shape[2] for c in chunks)
+        edges = np.concatenate(
+            [np.pad(c.edges, ((0, 0), (0, 0), (0, lmax - c.edges.shape[2])),
+                    constant_values=-1) for c in chunks])
+        pat = TrafficPattern(
+            first.pattern.name,
+            np.concatenate([c.pattern.src for c in chunks]),
+            np.concatenate([c.pattern.dst for c in chunks]),
+            np.concatenate([c.pattern.demand for c in chunks]),
+            first.pattern.endpoints_per_router)
+        return cls(pattern=pat, edges=edges,
+                   hops=np.concatenate([c.hops for c in chunks]),
+                   valid=np.concatenate([c.valid for c in chunks]),
+                   is_min=np.concatenate([c.is_min for c in chunks]),
+                   first_edge=np.concatenate([c.first_edge for c in chunks]),
+                   num_links=first.num_links, mode=first.mode)
 
 
 # --------------------------------------------------------------------------
@@ -311,12 +373,85 @@ def _vectorized_cvaliant_select(rt, de, src, dst, keys):
     return np.take_along_axis(nb_s, order, axis=1), cnt
 
 
+def _cvaliant_assemble(de: DirectedEdges, s_arr: np.ndarray,
+                       d_arr: np.ndarray, sel_nb: np.ndarray,
+                       cnt: np.ndarray, k_alt: int, lmax: int, walk):
+    """Shared Compact-Valiant slot machinery (both batched engines).
+
+    Truncates the filtered intermediate ordering to k_alt slots (k_alt may
+    exceed deg_max -- the extra slots can never hold a candidate), fills
+    empty slots with the route-safe destination, builds each candidate as
+    the s->r first hop plus the walked min(r -> d) segment, and masks
+    everything back to the slot validity.  `walk(srcs, dsts) -> ([R, D]
+    edge ids, [R] hops)` is the only engine-specific piece
+    (`_batched_path_edges` on the dense table, `_walk_edges_block` on a
+    column block).  Returns (edges [F, K, lmax], hops [F, K], valid [F, K]).
+    """
+    fb = len(s_arr)
+    k_take = min(k_alt, sel_nb.shape[1])
+    sel = np.full((fb, k_alt), -1, dtype=np.int64)
+    sel[:, :k_take] = sel_nb[:, :k_take]
+    n_sel = np.minimum(cnt, k_alt)  # [F]
+    slot_ok = np.arange(k_alt)[None, :] < n_sel[:, None]  # [F, K]
+    safe_sel = np.where(slot_ok, sel, d_arr[:, None])  # route-safe filler
+    d_rep = np.broadcast_to(d_arr[:, None], (fb, k_alt)).reshape(-1)
+    e2, h2 = walk(safe_sel.reshape(-1), d_rep)
+    e0 = de.edge_ids(s_arr[:, None], safe_sel)  # [F, K] first hop s->r
+    ec = -np.ones((fb * k_alt, lmax), dtype=np.int32)
+    ec[:, 0] = e0.reshape(-1)
+    ec[:, 1:1 + e2.shape[1]] = e2
+    ec = ec.reshape(fb, k_alt, lmax)
+    hc = (1 + h2).reshape(fb, k_alt).astype(np.int32)
+    return (np.where(slot_ok[:, :, None], ec, np.int32(-1)),
+            np.where(slot_ok, hc, 0).astype(np.int32), slot_ok.copy())
+
+
 # Entry budget for one destination block of the shortest-path-successor
 # table: flows are grouped by destination and each block builds a
 # [n, B, deg_max] table, with B sized so the block never exceeds this many
 # entries (memory stays bounded at any graph size; B >= n degenerates to the
 # old whole-table fast path).
 _ECMP_BLOCK_MAX_ENTRIES = 16_000_000
+
+
+def _dest_block(n: int, deg_max: int) -> int:
+    """Destinations per block so per-block tables stay under the entry cap
+    (shared by the ECMP successor tables and the blocked engine's column
+    consumption; B >= n degenerates to one whole-table block)."""
+    return max(1, _ECMP_BLOCK_MAX_ENTRIES // max(1, n * max(deg_max, 1)))
+
+
+def _ecmp_walk_block(dist_cols: np.ndarray, nb: np.ndarray,
+                     present: np.ndarray, safe_nb: np.ndarray,
+                     src_f: np.ndarray, d_f: np.ndarray, l_f: np.ndarray,
+                     u_f: np.ndarray, k: int, diam: int) -> np.ndarray:
+    """One destination block of the ECMP walk.
+
+    `dist_cols` is the block's [n, B] distance columns (a dense-table slice
+    or a blocked-BFS product -- bit-identical either way); builds
+    succ[u, d_local, j] = j-th neighbor of u on a shortest path toward
+    destination d_local (CSR neighbor order preserved) plus matching counts,
+    then walks the block's flows with plain table gathers.  Returns
+    [Fb, k, diam] int64 node walks (source column excluded).
+    """
+    dist_nb = dist_cols[safe_nb]  # [n, dmax, B]
+    good = (dist_nb.transpose(0, 2, 1)
+            == (dist_cols - np.int16(1))[:, :, None]) & present[:, None, :]
+    cnt_t = good.sum(axis=2).astype(np.int64)
+    order = np.argsort(~good, axis=2, kind="stable")  # good slots first
+    succ = np.take_along_axis(
+        np.broadcast_to(nb[:, None, :], good.shape), order, axis=2)
+    fb = len(src_f)
+    cur = np.broadcast_to(src_f[:, None], (fb, k)).copy().astype(np.int64)
+    d_b = np.broadcast_to(d_f[:, None], (fb, k))
+    l_b = np.broadcast_to(l_f[:, None], (fb, k))
+    walk = np.empty((fb, k, diam), dtype=np.int64)
+    for h in range(diam):
+        active = cur != d_b
+        j = np.floor(u_f[:, :, h] * cnt_t[cur, l_b]).astype(np.int64)
+        cur = np.where(active, succ[cur, l_b, j], cur).astype(np.int64)
+        walk[:, :, h] = cur
+    return walk
 
 
 def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
@@ -328,14 +463,12 @@ def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
     make progress toward dst[i], in sorted-neighbor order (matching the
     scalar reference exactly).
 
-    Successor tables are destination-blocked: flows are grouped by
-    destination, and each group of B destinations builds
-    succ[u, d_local, j] = j-th neighbor of u on a shortest path toward its
-    destination (CSR neighbor order preserved) plus the matching counts, then
-    walks all of its flows with plain table gathers.  Every flow's walk is
-    independent and consumes its own pre-drawn randomness, so the grouping
-    changes nothing about the output -- it only caps the table memory at
-    `_ECMP_BLOCK_MAX_ENTRIES` entries per block.
+    Successor tables are destination-blocked (`_ecmp_walk_block`): flows are
+    grouped by destination, and each group of B destinations builds its
+    tables from the dense table's column slice, then walks its flows.
+    Every flow's walk is independent and consumes its own pre-drawn
+    randomness, so the grouping changes nothing about the output -- it only
+    caps the table memory at `_ECMP_BLOCK_MAX_ENTRIES` entries per block.
     """
     f = len(src)
     nb, _ = de.padded_neighbors()
@@ -345,29 +478,13 @@ def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
     present = nb >= 0
     safe_nb = np.where(present, nb, 0)
     uniq, inv = np.unique(dst, return_inverse=True)
-    bdst = max(1, _ECMP_BLOCK_MAX_ENTRIES // max(1, n * dmax))
+    bdst = _dest_block(n, dmax)
     for lo in range(0, len(uniq), bdst):
         dblk = uniq[lo:lo + bdst].astype(np.int64)  # [B] destinations
         fsel = np.flatnonzero((inv >= lo) & (inv < lo + len(dblk)))
-        # succ[u, d_local, j] / cnt[u, d_local] for this destination block
-        dist_nb = rt.dist[safe_nb[:, :, None], dblk[None, None, :]]  # [n,dmax,B]
-        good = (dist_nb.transpose(0, 2, 1)
-                == (rt.dist[:, dblk] - 1)[:, :, None]) & present[:, None, :]
-        cnt_t = good.sum(axis=2).astype(np.int64)
-        order = np.argsort(~good, axis=2, kind="stable")  # good slots first
-        succ = np.take_along_axis(
-            np.broadcast_to(nb[:, None, :], good.shape), order, axis=2)
-        fb = len(fsel)
-        cur = np.broadcast_to(src[fsel][:, None], (fb, k)).copy().astype(np.int64)
-        d_b = np.broadcast_to(dst[fsel][:, None], (fb, k))
-        l_b = np.broadcast_to((inv[fsel] - lo)[:, None], (fb, k))
-        walk = np.empty((fb, k, rt.diameter), dtype=np.int64)
-        for h in range(rt.diameter):
-            active = cur != d_b
-            j = np.floor(u_draw[fsel, :, h] * cnt_t[cur, l_b]).astype(np.int64)
-            cur = np.where(active, succ[cur, l_b, j], cur).astype(np.int64)
-            walk[:, :, h] = cur
-        nodes[fsel, :, 1:] = walk
+        nodes[fsel, :, 1:] = _ecmp_walk_block(
+            rt.dist[:, dblk], nb, present, safe_nb, src[fsel], dst[fsel],
+            inv[fsel] - lo, u_draw[fsel], k, rt.diameter)
     return nodes
 
 
@@ -422,27 +539,9 @@ def _build_vectorized(rt: RoutingTables, pattern: TrafficPattern, mode: str,
         # (indexing the pre-drawn RV keeps outputs bit-identical).
         sel_nb, cnt = _vectorized_cvaliant_select(rt, de, src, dst,
                                                   draws["KEYS"])
-        # [F, K] selected intermediates; junk past cnt.  k_alt may exceed
-        # deg_max (sel_nb's width) -- the extra slots can never hold a
-        # candidate, so leave them at -1.
-        k_take = min(k_alt, sel_nb.shape[1])
-        sel = np.full((f, k_alt), -1, dtype=np.int64)
-        sel[:, :k_take] = sel_nb[:, :k_take]
-        n_sel = np.minimum(cnt, k_alt)  # [F]
-        slot_ok = np.arange(k_alt)[None, :] < n_sel[:, None]  # [F, K]
-        safe_sel = np.where(slot_ok, sel, dst[:, None])  # route-safe filler
-        f_b = np.broadcast_to(np.arange(f)[:, None], (f, k_alt)).ravel()
-        e2, h2 = _batched_path_edges(rt, de, safe_sel.ravel(),
-                                     dst[f_b].reshape(-1))
-        e0 = de.edge_ids(src[:, None], safe_sel)  # [F, K] first hop s->r
-        ec = -np.ones((f * k_alt, lmax), dtype=np.int32)
-        ec[:, 0] = e0.ravel()
-        ec[:, 1:1 + e2.shape[1]] = e2
-        ec = ec.reshape(f, k_alt, lmax)
-        hc = (1 + h2).reshape(f, k_alt).astype(np.int32)
-        edges_blk = np.where(slot_ok[:, :, None], ec, np.int32(-1))
-        hops_blk = np.where(slot_ok, hc, 0).astype(np.int32)
-        valid_blk = slot_ok.copy()
+        edges_blk, hops_blk, valid_blk = _cvaliant_assemble(
+            de, src, dst, sel_nb, cnt, k_alt, lmax,
+            lambda s, d: _batched_path_edges(rt, de, s, d))
         adj = rt.dist[src, dst] == 1  # [F]
         if adj.any():
             ev, hv = _vectorized_valiant(rt, de, src[adj], dst[adj],
@@ -454,6 +553,235 @@ def _build_vectorized(rt: RoutingTables, pattern: TrafficPattern, mode: str,
         hops[:, col:col + k_alt] = hops_blk
         valid[:, col:col + k_alt] = valid_blk
 
+    return FlowPaths(pattern=pattern, edges=edges, hops=hops, valid=valid,
+                     is_min=is_min, first_edge=first_edge, num_links=de.num,
+                     mode=mode)
+
+
+# --------------------------------------------------------------------------
+# destination-blocked engine (no [n, n] table anywhere)
+# --------------------------------------------------------------------------
+
+def _walk_edges_block(de: DirectedEdges, nh_cols: np.ndarray,
+                      srcs: np.ndarray, ld: np.ndarray, dsts: np.ndarray,
+                      diameter: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Blocked analogue of `_batched_path_edges`: walk each row from
+    srcs[i] toward dsts[i] using the destination's next-hop *column*
+    nh_cols[:, ld[i]].  Returns ([R, diameter] edge ids, -1 padded; [R] hop
+    counts); raises ValueError on unreachable pairs / diameter overruns with
+    the same messages as `minimal_paths`."""
+    r = len(srcs)
+    nodes = np.empty((r, diameter + 1), dtype=np.int32)
+    nodes[:, 0] = srcs
+    cur = np.asarray(srcs, dtype=np.int64)
+    for h in range(diameter):
+        nxt = nh_cols[cur, ld].astype(np.int64)
+        if (nxt == UNREACHABLE).any():
+            i = int(np.flatnonzero(nxt == UNREACHABLE)[0])
+            raise ValueError(f"no route {int(srcs[i])}->{int(dsts[i])}")
+        nodes[:, h + 1] = nxt
+        cur = nxt
+    if (cur != dsts).any():
+        i = int(np.flatnonzero(cur != dsts)[0])
+        raise ValueError(
+            f"path {int(srcs[i])}->{int(dsts[i])} exceeds diameter "
+            f"{diameter}")
+    u, v = nodes[:, :-1], nodes[:, 1:]
+    real = u != v
+    edges = np.where(real, de.edge_ids(u, v), np.int32(-1))
+    return edges.astype(np.int32), real.sum(axis=1).astype(np.int32)
+
+
+def _cvaliant_select_block(nh_cols: np.ndarray, nb: np.ndarray,
+                           src_f: np.ndarray, d_f: np.ndarray,
+                           l_f: np.ndarray, keys_f: np.ndarray):
+    """`_vectorized_cvaliant_select` on one destination block's next-hop
+    columns: bounce-back-filtered intermediate ordering from N(s)."""
+    nb_s = nb[src_f]  # [Fb, dmax]
+    present = nb_s >= 0
+    safe_nb = np.where(present, nb_s, 0)
+    ok = present & (nh_cols[safe_nb, l_f[:, None]] != src_f[:, None]) \
+        & (nb_s != d_f[:, None])
+    cnt = ok.sum(axis=1).astype(np.int64)
+    masked = np.where(ok, keys_f[:, :nb.shape[1]], np.inf)
+    order = np.argsort(masked, axis=1, kind="stable")  # valid slots first
+    return np.take_along_axis(nb_s, order, axis=1), cnt
+
+
+def blocked_paths_peak_bytes(n: int, e_dir: int, deg_max: int,
+                             num_flows: int, mode: str = "min",
+                             k_candidates: int = 8, diameter: int = 2,
+                             block: Optional[int] = None) -> int:
+    """Estimated peak bytes of a destination-blocked `build_flow_paths` run:
+    the per-flow candidate arrays plus one destination block's transient
+    working set (routing columns, successor tables, segment scratch).  No
+    term scales as [n, n] -- flow memory is proportional to the flow batch
+    and block memory to the `_ECMP_BLOCK_MAX_ENTRIES` budget, which is what
+    lets the scale tier route inside the 2 GiB test envelope
+    (tests/test_blocked_paths.py)."""
+    _, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
+    lmax = 2 * max(2, diameter)
+    dmax = max(deg_max, 1)
+    if block is None:
+        block = _dest_block(n, dmax)
+    # [F, K, L] int32 edges + hops/valid/is_min (+ first_edge/min scratch)
+    per_flow = k_total * (4 * lmax + 6) + 12 + 4 * max(diameter, 1)
+    if alt_kind in ("valiant", "cvaliant"):
+        # e1/e2 segment scratch + intermediate bookkeeping per candidate
+        per_flow += k_alt * (8 * max(diameter, 1) + 16)
+    # succ/cnt/order tables (ecmp) or the column-derivation gather -- both
+    # bounded by the same block * n * deg_max entry budget
+    table = 15 * block * n * dmax if mode == "ecmp" else 0
+    return (num_flows * per_flow + table
+            + dest_block_peak_bytes(n, e_dir, deg_max, block))
+
+
+def _build_blocked(rt, pattern: TrafficPattern, mode: str,
+                   k_candidates: int, seed: int) -> FlowPaths:
+    """Destination-blocked candidate construction (`engine="blocked"`).
+
+    `rt` is anything with the `dest_blocks` protocol (`RoutingTables` slices
+    its dense tables; `BlockedRouting` recomputes columns from the blocked
+    BFS).  Pass 1 groups flows by destination and consumes one column block
+    at a time: min walks (and the UGAL first edge), ECMP walks, CValiant
+    intermediate selection and every r->d segment route toward an in-block
+    destination.  Valiant s->r segments route toward random intermediates
+    instead, so pass 2 re-groups those segments by intermediate and walks
+    them from a second sweep of column blocks -- only destinations that
+    actually appear in the flow batch (or its intermediate draws) are ever
+    BFSed.  Randomness is pre-drawn identically to the other engines, so
+    outputs are bit-identical for equal arguments.
+    """
+    rng = np.random.default_rng(seed)
+    g = rt.graph
+    de = build_directed_edges(g)
+    n = g.n
+    f = pattern.num_flows
+    src = pattern.src.astype(np.int64)
+    dst = pattern.dst.astype(np.int64)
+
+    include_min, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
+    diam = rt.diameter
+    lmax = 2 * max(2, diam)
+    nb, deg = de.padded_neighbors()
+    dmax = int(deg.max()) if len(deg) else 0
+    draws = _draw_randomness(rng, alt_kind, f,
+                             k_total if mode == "ecmp" else k_alt,
+                             n, dmax, diam)
+
+    edges = -np.ones((f, k_total, lmax), dtype=np.int32)
+    hops = np.zeros((f, k_total), dtype=np.int32)
+    valid = np.zeros((f, k_total), dtype=bool)
+    is_min = np.zeros((f, k_total), dtype=bool)
+
+    present = nb >= 0
+    safe_nb = np.where(present, nb, 0)
+    # destinations per column block: the successor/column entry cap, further
+    # tightened by the routing state's own byte-budget block when it has one
+    # (BlockedRouting carries the bfs budget; RoutingTables slices for free)
+    block = _dest_block(n, dmax)
+    rt_block = getattr(rt, "block", None)
+    if rt_block is not None:
+        block = min(block, rt_block)
+    col = 1 if include_min else 0
+
+    min_e = np.full((f, diam), -1, dtype=np.int32)
+    min_h = np.zeros(f, dtype=np.int32)
+    if alt_kind in ("valiant", "cvaliant"):
+        s_rep = np.broadcast_to(src[:, None], (f, k_alt)).reshape(-1)
+        d_rep = np.broadcast_to(dst[:, None], (f, k_alt)).reshape(-1)
+        r_all = _skip2(draws["RV"].reshape(-1), s_rep, d_rep)  # [F * K]
+        e2 = -np.ones((f * k_alt, diam), dtype=np.int32)  # r->d segments
+        h2 = np.zeros(f * k_alt, dtype=np.int32)
+        adj = np.zeros(f, dtype=bool)
+
+    # ---- pass 1: flow-destination blocks --------------------------------
+    uniq, inv = np.unique(dst, return_inverse=True)
+    off = 0
+    for dblk, dist_cols, nh_cols in rt.dest_blocks(uniq, block):
+        b = len(dblk)
+        fsel = np.flatnonzero((inv >= off) & (inv < off + b))
+        ld = inv[fsel] - off
+        s_f, d_f = src[fsel], dst[fsel]
+        fb = len(fsel)
+        me, mh = _walk_edges_block(de, nh_cols, s_f, ld, d_f, diam)
+        min_e[fsel] = me
+        min_h[fsel] = mh
+        if mode == "ecmp":
+            walk = _ecmp_walk_block(dist_cols, nb, present, safe_nb, s_f,
+                                    d_f, ld, draws["U"][fsel], k_total, diam)
+            nodes = np.concatenate(
+                [np.broadcast_to(s_f[:, None, None], (fb, k_total, 1)),
+                 walk], axis=2)
+            u, v = nodes[:, :, :-1], nodes[:, :, 1:]
+            real = u != v
+            e = np.where(real, de.edge_ids(u, v), np.int32(-1))
+            edges[fsel, :, :e.shape[2]] = e
+            hops[fsel] = real.sum(axis=2)
+            valid[fsel] = True
+            is_min[fsel] = True
+        elif alt_kind == "cvaliant":
+            adj[fsel] = dist_cols[s_f, ld] == 1
+            sel_nb, cnt = _cvaliant_select_block(nh_cols, nb, s_f, d_f, ld,
+                                                 draws["KEYS"][fsel])
+            ld_rep = np.repeat(ld, k_alt)
+            eb, hb, vb = _cvaliant_assemble(
+                de, s_f, d_f, sel_nb, cnt, k_alt, lmax,
+                lambda s, d: _walk_edges_block(de, nh_cols, s, ld_rep, d,
+                                               diam))
+            edges[fsel, col:col + k_alt] = eb
+            hops[fsel, col:col + k_alt] = hb
+            valid[fsel, col:col + k_alt] = vb
+        if alt_kind in ("valiant", "cvaliant") and k_alt:
+            # r->d second segments (general Valiant, or the adjacent-pair
+            # Compact Valiant fallback): d is in this block
+            rows_f = fsel if alt_kind == "valiant" else fsel[adj[fsel]]
+            if len(rows_f):
+                seg = (rows_f[:, None] * k_alt
+                       + np.arange(k_alt)[None, :]).reshape(-1)
+                ld_seg = np.broadcast_to(
+                    (inv[rows_f] - off)[:, None],
+                    (len(rows_f), k_alt)).reshape(-1)
+                e2b, h2b = _walk_edges_block(de, nh_cols, r_all[seg], ld_seg,
+                                             d_rep[seg], diam)
+                e2[seg] = e2b
+                h2[seg] = h2b
+        off += b
+
+    # ---- pass 2: Valiant s->r segments, grouped by intermediate ---------
+    if alt_kind in ("valiant", "cvaliant") and k_alt:
+        if alt_kind == "valiant":
+            seg = np.arange(f * k_alt)
+        else:
+            seg = (np.flatnonzero(adj)[:, None] * k_alt
+                   + np.arange(k_alt)[None, :]).reshape(-1)
+        if len(seg):
+            e1 = np.empty((len(seg), diam), dtype=np.int32)
+            h1 = np.empty(len(seg), dtype=np.int32)
+            r_seg, s_seg = r_all[seg], s_rep[seg]
+            uniq_r, inv_r = np.unique(r_seg, return_inverse=True)
+            off_r = 0
+            for dblk, _, nh_cols in rt.dest_blocks(uniq_r, block):
+                b = len(dblk)
+                ssel = np.flatnonzero((inv_r >= off_r) & (inv_r < off_r + b))
+                e1[ssel], h1[ssel] = _walk_edges_block(
+                    de, nh_cols, s_seg[ssel], inv_r[ssel] - off_r,
+                    r_seg[ssel], diam)
+                off_r += b
+            ev = _stitch(e1, h1, e2[seg], lmax)
+            hv = (h1 + h2[seg]).astype(np.int32)
+            rows, cols = seg // k_alt, col + (seg % k_alt)
+            edges[rows, cols] = ev
+            hops[rows, cols] = hv
+            valid[rows, cols] = True
+
+    first_edge = (min_e[:, 0].copy() if min_e.shape[1]
+                  else np.zeros(f, dtype=np.int32))
+    if include_min:
+        edges[:, 0, :min_e.shape[1]] = min_e
+        hops[:, 0] = min_h
+        valid[:, 0] = True
+        is_min[:, 0] = True
     return FlowPaths(pattern=pattern, edges=edges, hops=hops, valid=valid,
                      is_min=is_min, first_edge=first_edge, num_links=de.num,
                      mode=mode)
@@ -552,16 +880,30 @@ def build_flow_paths_reference(rt: RoutingTables, pattern: TrafficPattern,
                      mode=mode)
 
 
-def build_flow_paths(rt: RoutingTables, pattern: TrafficPattern, mode: str,
+def build_flow_paths(rt, pattern: TrafficPattern, mode: str,
                      k_candidates: int = 8, seed: int = 0,
-                     engine: str = "vectorized") -> FlowPaths:
+                     engine: str = "auto") -> FlowPaths:
     """Build candidate paths for every flow of `pattern` under `mode`.
 
-    engine="vectorized" (default) runs the batched array engine;
-    engine="reference" runs the per-flow scalar spec.  Identical outputs.
+    `rt` is a `RoutingTables` (dense [n, n] tables) or a `BlockedRouting`
+    (streamed next-hop columns, no [n, n] state).  Engines -- all
+    bit-identical for equal arguments:
+
+      "auto"       -- "dense" when `rt` carries dense tables, "blocked"
+                      when it streams.
+      "dense"      -- batched array engine over the dense next-hop table
+                      (alias "vectorized", the pre-blocked-engine name).
+      "blocked"    -- destination-blocked construction; works with either
+                      routing state and never materializes [n, n].
+      "reference"  -- the per-flow scalar spec (requires dense tables).
     """
-    if engine == "vectorized":
+    if engine == "auto":
+        engine = "dense" if getattr(rt, "next_hop", None) is not None \
+            else "blocked"
+    if engine in ("dense", "vectorized"):
         return _build_vectorized(rt, pattern, mode, k_candidates, seed)
+    if engine == "blocked":
+        return _build_blocked(rt, pattern, mode, k_candidates, seed)
     if engine == "reference":
         return build_flow_paths_reference(rt, pattern, mode, k_candidates, seed)
     raise ValueError(f"unknown engine {engine!r}")

@@ -113,6 +113,10 @@ def perm_khop(rt: RoutingTables, k: int, p: int = 16,
     h = _hosts(rt.graph, hosts)
     nh = len(h)
     rng = np.random.default_rng(seed)
+    if getattr(rt, "dist", None) is None:
+        raise ValueError(
+            "perm_khop needs dense distances (build_routing); BlockedRouting "
+            "streams them -- build a RoutingTables for k-hop matchings")
     dist = rt.dist[np.ix_(h, h)]
     cands = [np.where(dist[i] == k)[0] for i in range(nh)]
     match_of_dst = -np.ones(nh, dtype=np.int64)

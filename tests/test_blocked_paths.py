@@ -1,0 +1,303 @@
+"""Destination-blocked flow-path construction vs the dense reference.
+
+Bit-exactness of the blocked engine (next-hop columns from the blocked BFS
+or sliced from dense tables) against engine="dense" across topologies,
+modes, and damage; UNREACHABLE propagation through the blocked builder on
+disconnected graphs; block-size / peak-bytes edge cases (n smaller than one
+block, byte budgets below one source row); FlowPaths chunk assembly through
+the fluid entry points; and the 2 GiB memory envelope the BENCH_LARGE fluid
+point relies on (`large`-marked for the real PS(9, 61) run).
+"""
+import numpy as np
+import pytest
+
+from repro.core import topologies as tp
+from repro.core.graph import GraphBuilder, UNREACHABLE
+from repro.core.polarfly import build_polarfly
+from repro.core import routing as routing_mod
+from repro.core.routing import (BlockedRouting, all_pairs_distances,
+                                bfs_block_size, bfs_peak_bytes,
+                                build_blocked_routing, build_routing,
+                                dest_block_peak_bytes, dest_block_size,
+                                destination_blocks, next_hop_table)
+from repro.simulation import (blocked_paths_peak_bytes, build_flow_paths,
+                              make_pattern, saturation_throughput)
+from repro.simulation import paths as paths_mod
+from repro.simulation.paths import FlowPaths
+from repro.simulation.traffic import TrafficPattern
+
+FIELDS = ("edges", "hops", "valid", "is_min", "first_edge")
+MODES = ("min", "ecmp", "valiant", "cvaliant", "ugal", "ugal_pf")
+
+TOPOS = {
+    "pf13": lambda: build_polarfly(13).graph,
+    "sf11": lambda: tp.build_slimfly(11),
+    "ps5x5": lambda: tp.build_polarstar(5, 5),
+    "df": lambda: tp.build_dragonfly(6, 3),
+    "ft": lambda: tp.build_fat_tree(6, 3),
+}
+
+
+def _graph(name, which):
+    g = TOPOS[name]()
+    if which == "damaged":
+        g = g.subgraph_without_edges(g.edge_list[::5][:8])
+    return g
+
+
+def _assert_paths_equal(a, b, ctx):
+    for f in FIELDS:
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (*ctx, f)
+
+
+# ---------------------------------------------------------------------------
+# next-hop columns: blocked BFS == dense table slices, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TOPOS))
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_destination_blocks_match_dense_columns(name, which):
+    g = _graph(name, which)
+    dist = all_pairs_distances(g, engine="dense")
+    nh = next_hop_table(g, dist, engine="dense")
+    for block in (None, 1, 7):
+        got_d = np.empty_like(dist)
+        got_n = np.empty_like(nh)
+        for dblk, dc, nc in destination_blocks(g, block=block):
+            got_d[:, dblk] = dc
+            got_n[:, dblk] = nc
+        assert np.array_equal(got_d, dist)  # symmetric, so columns == rows
+        assert np.array_equal(got_n, nh)
+
+
+def test_destination_blocks_sampled_dests_only():
+    """Only requested destinations are computed, in the requested order."""
+    g = TOPOS["df"]()
+    nh = next_hop_table(g)
+    dests = np.array([41, 3, 17])
+    out = list(destination_blocks(g, dests=dests, block=2))
+    assert [len(b[0]) for b in out] == [2, 1]
+    got = np.concatenate([b[0] for b in out])
+    assert np.array_equal(got, dests)
+    cols = np.concatenate([b[2] for b in out], axis=1)
+    assert np.array_equal(cols, nh[:, dests])
+
+
+def test_blocked_routing_matches_dense_diameter():
+    for name in sorted(TOPOS):
+        g = TOPOS[name]()
+        assert build_blocked_routing(g).diameter == build_routing(g).diameter
+
+
+# ---------------------------------------------------------------------------
+# blocked path engine == dense engine, every mode, intact + damaged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_blocked_engine_bit_identical_pf(mode, which):
+    g = _graph("pf13", which)
+    rt = build_routing(g)
+    br = build_blocked_routing(g)
+    pat = make_pattern("uniform", rt, p=4, seed=3, max_flows=4000)
+    dense = build_flow_paths(rt, pat, mode, k_candidates=5, seed=7,
+                             engine="dense")
+    # blocked on dense column slices, blocked on BFS columns, and the
+    # auto dispatch (RoutingTables -> dense, BlockedRouting -> blocked)
+    _assert_paths_equal(dense, build_flow_paths(rt, pat, mode, 5, 7,
+                                                engine="blocked"),
+                        (mode, which, "cols-from-dense"))
+    _assert_paths_equal(dense, build_flow_paths(br, pat, mode, 5, 7),
+                        (mode, which, "cols-from-bfs"))
+    _assert_paths_equal(dense, build_flow_paths(rt, pat, mode, 5, 7),
+                        (mode, which, "auto-dense"))
+
+
+@pytest.mark.parametrize("name", sorted(TOPOS))
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_blocked_engine_all_topologies(name, which):
+    """PF / SF / PolarStar / DF / FT, intact and damaged (the damaged
+    variants all remain connected): blocked == dense on ECMP successor
+    sets and UGAL_PF candidate construction."""
+    g = _graph(name, which)
+    rt = build_routing(g)
+    br = build_blocked_routing(g)
+    pat = make_pattern("uniform", rt, p=2, seed=1, max_flows=3000)
+    for mode in ("ecmp", "ugal_pf"):
+        dense = build_flow_paths(rt, pat, mode, k_candidates=4, seed=9,
+                                 engine="dense")
+        _assert_paths_equal(dense, build_flow_paths(br, pat, mode, 4, 9),
+                            (name, which, mode))
+
+
+def test_blocked_single_destination_blocks(monkeypatch):
+    """An entry budget of 1 forces one-destination blocks everywhere; the
+    grouping must stay invisible in the outputs."""
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("random_perm", rt, p=4, seed=0)
+    ref = {m: build_flow_paths(rt, pat, m, k_candidates=6, seed=0,
+                               engine="dense") for m in MODES}
+    monkeypatch.setattr(paths_mod, "_ECMP_BLOCK_MAX_ENTRIES", 1)
+    br = build_blocked_routing(pf.graph)
+    for m in MODES:
+        _assert_paths_equal(ref[m], build_flow_paths(br, pat, m, 6, 0), (m,))
+
+
+def test_build_flow_paths_engine_errors():
+    pf = build_polarfly(5)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("uniform", rt, p=2)
+    with pytest.raises(ValueError, match="unknown engine"):
+        build_flow_paths(rt, pat, "min", engine="turbo")
+    # vectorized stays accepted as the dense engine's alias
+    _assert_paths_equal(
+        build_flow_paths(rt, pat, "min", engine="vectorized"),
+        build_flow_paths(rt, pat, "min", engine="dense"), ("alias",))
+
+
+# ---------------------------------------------------------------------------
+# UNREACHABLE propagation + block-size edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+def _two_islands():
+    b = GraphBuilder("two-islands", 6)
+    b.add_edge(0, 1)
+    b.add_edge(1, 2)
+    b.add_edge(3, 4)
+    b.add_edge(4, 5)
+    return b.freeze()
+
+
+def test_unreachable_propagates_through_blocked_builder():
+    g = _two_islands()
+    rt = build_routing(g)
+    br = build_blocked_routing(g)
+    assert br.diameter == rt.diameter == 2  # largest finite distance
+    cross = TrafficPattern("cross", np.array([0]), np.array([4]),
+                           np.array([1.0], dtype=np.float32), 1)
+    for routing, engine in ((rt, "dense"), (rt, "blocked"), (br, "blocked")):
+        with pytest.raises(ValueError, match="no route 0->4"):
+            build_flow_paths(routing, cross, "min", engine=engine)
+    # in-island flows still build, identically across engines
+    intra = TrafficPattern("intra", np.array([0, 5]), np.array([2, 3]),
+                           np.ones(2, dtype=np.float32), 1)
+    _assert_paths_equal(
+        build_flow_paths(rt, intra, "min", engine="dense"),
+        build_flow_paths(br, intra, "min"), ("islands",))
+    # the UNREACHABLE sentinel itself flows out of the column iterator
+    for dblk, dc, nc in destination_blocks(g, dests=np.array([4])):
+        assert dc[0, 0] == UNREACHABLE and nc[0, 0] == UNREACHABLE
+        assert nc[4, 0] == 4
+
+
+def test_block_sizes_degenerate_budgets():
+    """n smaller than one block; budgets below one source/destination row."""
+    # tiny graph: the default budget covers every source in one block
+    assert bfs_block_size(8, 24) == 8
+    assert dest_block_size(8, 24, 3) == 8
+    # budgets below one row floor at a single source/destination
+    assert bfs_block_size(6321, 6321 * 80, budget_bytes=1) == 1
+    assert dest_block_size(6321, 6321 * 80, 80, budget_bytes=1) == 1
+    assert bfs_block_size(1, 0) == 1
+    assert dest_block_size(1, 0, 0) == 1
+    # peak estimates stay positive and monotone in the block
+    assert dest_block_peak_bytes(100, 400, 4, 2) \
+        == 2 * dest_block_peak_bytes(100, 400, 4, 1) > 0
+    assert bfs_peak_bytes(100, 400, 1, dist_table=False, next_hop=False) > 0
+
+
+def test_blocked_builder_under_starved_budget():
+    """A byte budget below one destination row still routes correctly (the
+    iterator floors at one destination per block)."""
+    g = TOPOS["df"]()
+    rt = build_routing(g)
+    br = BlockedRouting(graph=g, diameter=rt.diameter, block=1)
+    pat = make_pattern("uniform", rt, p=2, seed=5, max_flows=500)
+    _assert_paths_equal(
+        build_flow_paths(rt, pat, "ugal", k_candidates=3, seed=2,
+                         engine="dense"),
+        build_flow_paths(br, pat, "ugal", k_candidates=3, seed=2), ("b1",))
+
+
+def test_perm_khop_requires_dense_routing():
+    g = TOPOS["df"]()
+    br = build_blocked_routing(g)
+    with pytest.raises(ValueError, match="dense distances"):
+        make_pattern("perm2hop", br, p=2)
+
+
+# ---------------------------------------------------------------------------
+# incremental FlowPaths assembly through the fluid entry points
+# ---------------------------------------------------------------------------
+
+def test_flow_paths_concat_matches_whole():
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("uniform", rt, p=4, seed=0)
+    fp = build_flow_paths(rt, pat, "ugal", k_candidates=4, seed=0)
+    h = pat.num_flows // 2
+
+    def chunk(sl):
+        sub = TrafficPattern(pat.name, pat.src[sl], pat.dst[sl],
+                             pat.demand[sl], pat.endpoints_per_router)
+        return FlowPaths(pattern=sub, edges=fp.edges[sl], hops=fp.hops[sl],
+                         valid=fp.valid[sl], is_min=fp.is_min[sl],
+                         first_edge=fp.first_edge[sl],
+                         num_links=fp.num_links, mode=fp.mode)
+
+    chunks = [chunk(slice(0, h)), chunk(slice(h, None))]
+    _assert_paths_equal(FlowPaths.concat(chunks), fp, ("concat",))
+    assert FlowPaths.concat([fp]) is fp
+    # the fluid entries accept the raw chunk list
+    assert saturation_throughput(chunks, tol=0.02, iters=100) \
+        == saturation_throughput(fp, tol=0.02, iters=100)
+    with pytest.raises(ValueError, match="no FlowPaths"):
+        FlowPaths.concat([])
+    other = build_flow_paths(rt, pat, "min")
+    with pytest.raises(ValueError, match="disagree"):
+        FlowPaths.concat([fp, other])
+
+
+# ---------------------------------------------------------------------------
+# memory envelope of the blocked build (scale tier)
+# ---------------------------------------------------------------------------
+
+def test_blocked_paths_memory_envelope():
+    """The BENCH_LARGE fluid points fit 2 GiB: per-flow arrays + one
+    destination block's working set, for PF(79) and PS(9, 61) at the
+    benchmark's sampled-flow counts -- and with no [n, n] term the
+    estimate keeps fitting far past the dense builder's ~2^15 wall."""
+    for n, radix, flows, mode in ((6321, 80, 60_000, "ugal_pf"),
+                                  (5551, 40, 60_000, "ugal_pf"),
+                                  (6321, 80, 3_600_000, "min")):
+        peak = blocked_paths_peak_bytes(n, n * radix, radix, flows, mode,
+                                        k_candidates=8, diameter=3)
+        assert peak < 2 * 2 ** 30, (n, mode, peak)
+    # a dense [n, n] int32 next-hop table alone blows the envelope at 2^15
+    n_wall = 2 ** 15
+    assert 4 * n_wall * n_wall > 2 * 2 ** 30
+    assert blocked_paths_peak_bytes(n_wall, n_wall * 32, 32, 100_000,
+                                    "ugal_pf", 8, 3) < 2 * 2 ** 30
+
+
+@pytest.mark.large
+@pytest.mark.slow  # command-line -m replaces the addopts default; keep
+# "-m 'not slow'" excluding the scale tier too
+def test_scale_tier_blocked_fluid_ps9x61():
+    """A real fluid-throughput point at n = 5551 through the blocked stack:
+    host-restricted sampled flows, BlockedRouting (no [n, n] anywhere), and
+    a saturation solve -- the acceptance point for the BENCH_LARGE tier."""
+    g = tp.build_polarstar(9, 61)
+    assert g.n == 5551
+    e_dir = int(g.degrees.sum())
+    peak = blocked_paths_peak_bytes(g.n, e_dir, int(g.degrees.max()),
+                                    65_000, "min", 8, 3)
+    assert peak < 2 * 2 ** 30
+    br = build_blocked_routing(g)
+    assert br.diameter == 3
+    hosts = np.arange(256, dtype=np.int32)
+    pat = make_pattern("uniform", br, p=20, hosts=hosts, seed=0)
+    fp = build_flow_paths(br, pat, "min", seed=0)  # auto -> blocked
+    sat = saturation_throughput(fp, tol=0.05)
+    assert 0.0 < sat <= 1.0
