@@ -51,5 +51,26 @@ def large() -> bool:
     return os.environ.get("BENCH_LARGE", "0") not in ("", "0")
 
 
+def tier() -> str:
+    """Active tier name (stamps the BENCH_<TIER>.json the runner writes)."""
+    if large():
+        return "LARGE"
+    if smoke():
+        return "SMOKE"
+    return "FULL"
+
+
+# Rows emitted since the last `drain_rows()` call; `benchmarks.run` drains
+# after each bench module to build the per-figure JSON record.
+_ROWS: list = []
+
+
+def drain_rows() -> list:
+    rows, _ROWS[:] = _ROWS[:], []
+    return rows
+
+
 def emit(name: str, us: float, derived) -> None:
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": str(derived)})
     print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,8 +1,20 @@
 """Run every benchmark; one per paper table/figure + kernels/fabric/roofline.
-Prints `name,us_per_call,derived` CSV."""
+
+Prints `name,us_per_call,derived` CSV and writes a machine-readable
+`BENCH_<TIER>.json` (TIER in SMOKE/FULL/LARGE, from BENCH_SMOKE /
+BENCH_LARGE) next to the repo root -- or under $BENCH_JSON_DIR when set.
+The JSON carries per-figure wall times, every emitted row, and the
+measured saturation points extracted from `sat=` derived values, so runs
+can be diffed across commits without re-parsing stdout.
+"""
 import importlib
+import json
+import os
 import sys
+import time
 import traceback
+
+from benchmarks import common
 
 BENCHES = [
     "bench_fig1_feasible_degrees",
@@ -24,19 +36,55 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def _saturations(rows) -> dict:
+    """{row name: float} for every row whose derived value is `sat=<x>`."""
+    out = {}
+    for row in rows:
+        derived = row["derived"]
+        if derived.startswith("sat="):
+            try:
+                out[row["name"]] = float(derived[len("sat="):])
+            except ValueError:
+                pass
+    return out
+
+
+def write_report(figures: dict, path: str) -> None:
+    rows = [r for fig in figures.values() for r in fig["rows"]]
+    report = {
+        "tier": common.tier(),
+        "total_wall_s": round(sum(f["wall_s"] for f in figures.values()), 3),
+        "figures": figures,
+        "saturations": _saturations(rows),
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {path}", flush=True)
+
+
+def main() -> None:  # reprolint: allow[naked-clock] -- times whole bench modules (imports + device work each bench already blocks on), not individual device calls; common.timed is for those
     print("name,us_per_call,derived")
     failures = 0
     only = sys.argv[1:] or None
+    figures = {}
     for mod in BENCHES:
         if only and not any(o in mod for o in only):
             continue
+        t0 = time.perf_counter()
         try:
             importlib.import_module(f"benchmarks.{mod}").run()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{mod},0,ERROR", flush=True)
             traceback.print_exc()
+            common.drain_rows()  # don't attribute the partial rows
+            continue
+        figures[mod] = {"wall_s": round(time.perf_counter() - t0, 3),
+                        "rows": common.drain_rows()}
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    write_report(figures, os.path.join(out_dir,
+                                       f"BENCH_{common.tier()}.json"))
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

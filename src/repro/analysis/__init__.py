@@ -1,0 +1,27 @@
+"""reprolint: AST-based invariant checks for the performance discipline
+this repo has already paid for.
+
+PRs 1-4 earned a set of hard engineering invariants -- no dense [n, n]
+materialization on the simulation path, scatter-adds reformulated as
+gathers, benchmark clocks that block on device outputs, JAX-version shims
+routed through ``repro.parallel.compat`` -- but nothing *enforced* them;
+each could silently rot in review.  This package turns that
+commit-message lore into a CI gate:
+
+    PYTHONPATH=src python -m repro.analysis.lint src benchmarks examples
+
+One AST visitor per rule (``repro.analysis.rules``), inline suppression
+pragmas with a mandatory reason string::
+
+    x = np.full((n, n), -1)  # reprolint: allow[dense-square] -- why it is fine
+
+and text / JSON reporters (``repro.analysis.report``).  A pragma on a
+``def`` line suppresses the rule for the whole function body.  The
+package is stdlib-only on purpose: the CI lint job runs it without
+installing jax or numpy.
+
+See docs/architecture.md ("Invariants") for the rule-by-rule rationale.
+"""
+
+from .report import Finding, LintResult  # noqa: F401
+from .rules import ALL_RULES  # noqa: F401

@@ -1,0 +1,72 @@
+"""compat-shim: JAX-version-dependent APIs route through the shims.
+
+The toolchain pins JAX 0.4.37, where ``shard_map`` lives in
+``jax.experimental.shard_map`` (kwarg ``check_rep``) while newer JAX
+exposes ``jax.shard_map`` (kwarg ``check_vma``), and where
+``jax.sharding.AxisType`` / ``jax.make_mesh(axis_types=...)`` may or may
+not exist.  ``repro/parallel/compat.py`` and ``repro/launch/mesh.py`` own
+those guards; every other call site must import from the shims, or the
+next JAX bump breaks call sites one by one instead of in one file.
+
+Flags, outside the two shim files (excluded via the rule's scope config):
+
+* ``from jax.experimental.shard_map import ...`` (and ``from
+  jax.experimental import shard_map``);
+* ``from jax import shard_map`` / ``jax.shard_map`` attribute uses;
+* ``jax.sharding.AxisType`` imports or attribute uses.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..report import Finding
+from .base import FileContext, Rule
+
+_MSG = ("version-dependent JAX API used directly; route through "
+        "repro.parallel.compat / repro.launch.mesh so the 0.4.x/0.5.x "
+        "renames stay guarded in one place")
+
+
+def _flagged_import(node: ast.ImportFrom) -> bool:
+    mod = node.module or ""
+    if node.level:  # relative import (e.g. from .compat import shard_map)
+        return False
+    if mod == "jax.experimental.shard_map":
+        return True
+    names = {a.name for a in node.names}
+    if mod == "jax.experimental" and "shard_map" in names:
+        return True
+    if mod == "jax.sharding" and "AxisType" in names:
+        return True
+    if mod == "jax" and "shard_map" in names:
+        return True
+    return False
+
+
+class CompatShimRule(Rule):
+    id = "compat-shim"
+    description = ("shard_map/AxisType only via parallel/compat.py and "
+                   "launch/mesh.py (JAX 0.4.x/0.5.x rename guards)")
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and _flagged_import(node):
+                out.append(self.finding(ctx, node, _MSG))
+            elif isinstance(node, ast.Attribute):
+                # only the outermost link of a dotted chain, so
+                # jax.experimental.shard_map.shard_map reports once
+                if isinstance(ctx.parent(node), ast.Attribute):
+                    continue
+                fq = ctx.dotted(node)
+                if fq is None:
+                    continue
+                # prefix-match so jax.sharding.AxisType.Explicit (an access
+                # THROUGH the flagged name) reports too
+                flagged = ("jax.shard_map", "jax.sharding.AxisType",
+                           "jax.experimental.shard_map")
+                if any(fq == t or fq.startswith(t + ".") for t in flagged):
+                    out.append(self.finding(ctx, node, _MSG))
+        return out

@@ -1,0 +1,107 @@
+"""dense-square: no dense [n, n] materialization on the simulation path.
+
+PR 3 made the graph core CSR-first and PR 4 retired the simulator's last
+dense [n, n] consumer; the blocked engines exist precisely so nothing on
+the scaled path ever allocates an O(n^2) array again.  This rule flags,
+in the scoped simulation-path modules:
+
+* square symbolic allocations -- ``np.zeros((n, n))`` / ``jnp.full((n, n),
+  v)`` / ``np.empty`` / ``np.ones`` where the same non-constant dimension
+  expression repeats (``(3, 3)`` literals are someone's stencil, not a
+  scaling hazard), plus ``np.eye(n)`` with a symbolic size;
+* outer-broadcast comparisons ``x[:, None] == y[None, :]``, which
+  materialize the full [n, n] comparison matrix.
+
+Functions whose name contains ``_reference`` or ``dense`` are exempt: the
+two-engine discipline deliberately keeps a small-n dense twin per engine.
+Everything else needs a ``# reprolint: allow[dense-square] -- reason``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from ..report import Finding
+from .base import FileContext, Rule
+
+_ALLOC = {f"{m}.{f}" for m in ("numpy", "jax.numpy")
+          for f in ("zeros", "ones", "full", "empty")}
+_EYE = {"numpy.eye", "jax.numpy.eye"}
+_EXEMPT_FN = re.compile(r"_reference|dense")
+
+
+def _axis_pattern(node: ast.AST) -> Optional[str]:
+    """"col" for ``x[:, None]``, "row" for ``x[None, :]``, else None."""
+    if not (isinstance(node, ast.Subscript)
+            and isinstance(node.slice, ast.Tuple)
+            and len(node.slice.elts) == 2):
+        return None
+    a, b = node.slice.elts
+
+    def is_none(e):
+        return isinstance(e, ast.Constant) and e.value is None
+
+    if isinstance(a, ast.Slice) and is_none(b):
+        return "col"
+    if is_none(a) and isinstance(b, ast.Slice):
+        return "row"
+    return None
+
+
+def _square_dims(shape: ast.AST) -> Optional[str]:
+    """The repeated symbolic dimension expression of a square shape tuple,
+    or None.  Constant dims never count: only a repeated *expression*
+    (``(n, n)``, ``(g.n, g.n)``) scales quadratically with the input."""
+    if not isinstance(shape, (ast.Tuple, ast.List)):
+        return None
+    dims = [ast.unparse(e) for e in shape.elts
+            if not isinstance(e, ast.Constant)]
+    seen = set()
+    for d in dims:
+        if d in seen:
+            return d
+        seen.add(d)
+    return None
+
+
+class DenseSquareRule(Rule):
+    id = "dense-square"
+    description = ("no dense [n, n] allocation or outer-broadcast compare "
+                   "on the simulation path (blocked engines exist for this; "
+                   "PR 3/4)")
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if any(_EXEMPT_FN.search(fn.name)
+                   for fn in ctx.enclosing_functions(node)):
+                continue
+            if isinstance(node, ast.Call):
+                fq = ctx.dotted(node.func)
+                if fq in _ALLOC and node.args:
+                    dim = _square_dims(node.args[0])
+                    if dim is not None:
+                        out.append(self.finding(
+                            ctx, node,
+                            f"square allocation {ast.unparse(node.func)}"
+                            f"((.., {dim}, {dim}, ..)) materializes [n, n];"
+                            " use the blocked/CSR engines or suppress with"
+                            " a reason"))
+                elif (fq in _EYE and node.args
+                        and not isinstance(node.args[0], ast.Constant)):
+                    out.append(self.finding(
+                        ctx, node,
+                        f"{ast.unparse(node.func)}({ast.unparse(node.args[0])})"
+                        " materializes a dense [n, n] identity; stream"
+                        " per-block or suppress with a reason"))
+            elif isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                pats = {p for p in map(_axis_pattern, sides) if p}
+                if pats == {"col", "row"}:
+                    out.append(self.finding(
+                        ctx, node,
+                        "outer-broadcast comparison ([:, None] vs [None, :])"
+                        " materializes the full [n, n] matrix"))
+        return out

@@ -1,0 +1,49 @@
+"""naked-clock: benchmark timings must block on device outputs.
+
+PR 2 fixed a whole class of benchmark lies: JAX dispatches asynchronously,
+so a bare ``time.perf_counter()`` pair around a device computation stops
+the clock while the work is still in flight.  ``benchmarks.common.timed``
+wraps the call in ``jax.block_until_ready`` before reading the clock; it
+is the only place in ``benchmarks/`` allowed to touch the clock directly.
+
+The rule flags every wall-clock read (``perf_counter`` / ``monotonic`` /
+``time`` / ``perf_counter_ns``) in scoped files outside a function named
+``timed``.  Host-only timing that deliberately includes compile/dispatch
+(e.g. whole-figure wall times) suppresses with a reason.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..report import Finding
+from .base import FileContext, Rule
+
+_CLOCKS = {f"time.{f}" for f in
+           ("perf_counter", "perf_counter_ns", "monotonic", "time")}
+_BLESSED_FN = "timed"
+
+
+class NakedClockRule(Rule):
+    id = "naked-clock"
+    description = ("wall-clock reads in benchmarks must go through "
+                   "common.timed (blocks on device outputs; PR 2's "
+                   "async-dispatch timing bug class)")
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and ctx.dotted(node.func) in _CLOCKS):
+                continue
+            if any(fn.name == _BLESSED_FN
+                   for fn in ctx.enclosing_functions(node)):
+                continue
+            out.append(self.finding(
+                ctx, node,
+                f"naked {ast.unparse(node.func)}() -- JAX dispatch is "
+                "async, so the clock can stop before device work "
+                "finishes; time through common.timed (which calls "
+                "block_until_ready) or suppress with a reason"))
+        return out

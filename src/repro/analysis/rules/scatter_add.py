@@ -1,0 +1,43 @@
+"""scatter-add: no ``.at[...].add(...)`` on the simulation path.
+
+PR 1's ~6x fluid-solver win came from reformulating the link-load
+scatter-add as a padded gather + row sum: XLA:CPU lowers scatter to a
+serialized loop, so a scatter in a Frank-Wolfe step body costs the whole
+speedup back.  Any surviving scatter must be a deliberate, measured
+fallback (the skewed-incidence path in ``FlowPaths.device_arrays``) and
+carry a ``# reprolint: allow[scatter-add] -- reason`` pragma.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..report import Finding
+from .base import FileContext, Rule
+
+
+def _is_at_add(node: ast.Call) -> bool:
+    """Matches ``<expr>.at[<idx>].add(<...>)``."""
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "add"
+            and isinstance(f.value, ast.Subscript)
+            and isinstance(f.value.value, ast.Attribute)
+            and f.value.value.attr == "at")
+
+
+class ScatterAddRule(Rule):
+    id = "scatter-add"
+    description = (".at[].add() scatter on the simulation path -- XLA:CPU "
+                   "serializes scatter; reformulate as a gather (PR 1)")
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        return [
+            self.finding(
+                ctx, node,
+                ".at[...].add(...) is a scatter-add -- XLA:CPU serializes "
+                "it (~6x slower than the padded-gather reformulation, "
+                "PR 1); reformulate or suppress with a reason")
+            for node in ast.walk(ctx.tree)
+            if isinstance(node, ast.Call) and _is_at_add(node)
+        ]

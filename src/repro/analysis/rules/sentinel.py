@@ -1,0 +1,64 @@
+"""sentinel: one UNREACHABLE constant, no magic -1 / 32000 markers.
+
+PR 3 unified the unreachable-pair marker across the core modules:
+``repro.core.graph.UNREACHABLE`` (= -1) is the only sentinel that leaves
+any routing API, and the old ``32000`` "big distance" magic number is
+gone.  This rule keeps it that way in the scoped core/simulation modules:
+
+* any literal ``32000`` (the retired pseudo-infinity);
+* equality comparisons against literal ``-1`` (``x == -1`` / ``x != -1``)
+  -- distance/next-hop code must compare against ``UNREACHABLE``;
+* ``np.full(shape, -1)`` fills -- tables of unreachable markers must be
+  filled with ``UNREACHABLE``.
+
+Legitimate -1s with a *different* meaning (edge-id pads, "no edge"
+lookup misses, unassigned-slot markers) suppress with a reason naming
+that meaning, which doubles as documentation at the use site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..report import Finding
+from .base import FileContext, Rule, is_neg_one
+
+_FULL = {"numpy.full", "jax.numpy.full"}
+_RETIRED_MAGIC = 32000
+
+
+class SentinelRule(Rule):
+    id = "sentinel"
+    description = ("use repro.core.graph.UNREACHABLE, not literal -1/32000 "
+                   "sentinels (unified in PR 3)")
+
+    def check(self, ctx: FileContext) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if (isinstance(node, ast.Constant)
+                    and node.value == _RETIRED_MAGIC):
+                out.append(self.finding(
+                    ctx, node,
+                    f"literal {_RETIRED_MAGIC} is the retired "
+                    "pseudo-infinity sentinel; use UNREACHABLE (or a "
+                    "named module constant)"))
+            elif isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                if (any(isinstance(op, (ast.Eq, ast.NotEq))
+                        for op in node.ops)
+                        and any(is_neg_one(s) for s in sides)):
+                    out.append(self.finding(
+                        ctx, node,
+                        "comparison against literal -1; compare against "
+                        "UNREACHABLE (repro.core.graph) or suppress with "
+                        "the marker's actual meaning"))
+            elif (isinstance(node, ast.Call)
+                    and ctx.dotted(node.func) in _FULL
+                    and len(node.args) >= 2 and is_neg_one(node.args[1])):
+                out.append(self.finding(
+                    ctx, node,
+                    "np.full(..., -1) sentinel fill; fill with "
+                    "UNREACHABLE or suppress with the marker's actual "
+                    "meaning"))
+        return out

@@ -52,7 +52,7 @@ def diameter_and_aspl(g: Graph, dist: Optional[np.ndarray] = None,
         return diam, total / pairs
     if dist is None:
         dist = all_pairs_distances(g, engine=engine)
-    off = ~np.eye(g.n, dtype=bool)
+    off = ~np.eye(g.n, dtype=bool)  # reprolint: allow[dense-square] -- dense-engine branch only; masks a dist matrix the caller already materialized
     vals = dist[off]
     if (vals == UNREACHABLE).any():
         return int(UNREACHABLE), float("inf")

@@ -221,7 +221,7 @@ def distance_blocks(g: Graph, block: Optional[int] = None,
         yield srcs, dist, nh
 
 
-def sparse_routing_tables(g: Graph, block: Optional[int] = None,
+def sparse_routing_tables(g: Graph, block: Optional[int] = None,  # reprolint: allow[dense-square] -- contract IS the full [n, n] table pair; built block-by-block, only the output is dense
                           ) -> Tuple[np.ndarray, np.ndarray]:
     """Full ([n, n] int16 distances, [n, n] int32 next hops) via the blocked
     BFS engine; bit-identical to the dense `all_pairs_distances` +
@@ -391,7 +391,7 @@ def bfs_distances(g: Graph, src: int) -> np.ndarray:
     return dist[0]
 
 
-def all_pairs_distances(g: Graph, engine: str = "auto") -> np.ndarray:
+def all_pairs_distances(g: Graph, engine: str = "auto") -> np.ndarray:  # reprolint: allow[dense-square] -- contract IS the full [n, n] distance matrix; dense branch is the small-n reference engine
     """[n, n] int16 distance matrix (UNREACHABLE = -1 off-diagonal marks
     disconnected pairs).
 
@@ -428,7 +428,7 @@ def all_pairs_distances(g: Graph, engine: str = "auto") -> np.ndarray:
     return dist
 
 
-def next_hop_table(g: Graph, dist: Optional[np.ndarray] = None,
+def next_hop_table(g: Graph, dist: Optional[np.ndarray] = None,  # reprolint: allow[dense-square] -- contract IS the full [n, n] next-hop table (legacy API); blocked engine backs the sparse branch
                    engine: str = "auto") -> np.ndarray:
     """[n, n] int32 next-hop table for minimal routing on any graph.
 

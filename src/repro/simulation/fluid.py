@@ -159,7 +159,7 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         # slower, but rounding stays proportional to each edge's own load
         w3 = w.reshape(eidx.shape[0], eidx.shape[1], 1) \
             * (eidx < num_links).astype(jnp.float32)
-        rho = jnp.zeros(num_links + 1).at[eidx.reshape(-1)].add(w3.reshape(-1))
+        rho = jnp.zeros(num_links + 1).at[eidx.reshape(-1)].add(w3.reshape(-1))  # reprolint: allow[scatter-add] -- deliberate fallback for pathologically skewed incidence where the padded gather would blow memory; FlowPaths.device_arrays picks the pad path whenever it fits
         return rho[:num_links]  # [E]
 
     def cost_of(rho):

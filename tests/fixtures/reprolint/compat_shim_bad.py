@@ -1,0 +1,12 @@
+"""Fixture: direct version-dependent JAX API uses the rule must flag."""
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import AxisType
+
+
+def mesh_types():
+    return jax.sharding.AxisType.Explicit
+
+
+def new_style(f, mesh, specs):
+    return jax.shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)

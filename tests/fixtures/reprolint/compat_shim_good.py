@@ -1,0 +1,6 @@
+"""Fixture: shim-routed imports the compat-shim rule must NOT flag."""
+from repro.parallel.compat import shard_map  # the shim, not jax directly
+
+
+def sharded(f, mesh, specs):
+    return shard_map(f, mesh=mesh, in_specs=specs, out_specs=specs)

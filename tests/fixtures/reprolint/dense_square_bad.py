@@ -1,0 +1,12 @@
+"""Fixture: every dense-square pattern the rule must flag."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def build(n, a, b):
+    d = jnp.zeros((n, n))                      # alloc, repeated symbolic dim
+    e = np.full((n, n), 0, dtype=np.int16)     # full with square shape
+    f = np.empty((n, n))                       # empty with square shape
+    g = np.eye(n)                              # symbolic-order identity
+    mask = a[:, None] == b[None, :]            # outer-broadcast [n, n]
+    return d, e, f, g, mask

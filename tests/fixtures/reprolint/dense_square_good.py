@@ -1,0 +1,19 @@
+"""Fixture: shapes the dense-square rule must NOT flag."""
+import numpy as np
+
+
+def build(n, m, a):
+    r = np.zeros((n, 3))        # constant second dim
+    s = np.zeros((n, m))        # two different symbolic dims
+    t = np.eye(4)               # constant-order identity
+    u = a[:, None] * 2          # one-sided broadcast, no [None, :] partner
+    return r, s, t, u
+
+
+def dense_reference(n):
+    # function name matches the _reference|dense exemption
+    return np.zeros((n, n))
+
+
+def suppressed(n):
+    return np.ones((n, n))  # reprolint: allow[dense-square] -- fixture: pragma suppression must work

@@ -1,0 +1,20 @@
+"""Fixture: host syncs inside jit-decorated bodies the rule must flag."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def f(x):
+    return x.item()
+
+
+@jax.jit
+def g(x):
+    return float(x) * 2.0
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def h(x, k):
+    return np.asarray(x)[:k]

@@ -1,0 +1,23 @@
+"""Fixture: patterns the host-sync rule must NOT flag."""
+import functools
+
+import jax
+
+
+def not_jitted(x):
+    return x.item()  # host code, sync is fine
+
+
+@jax.jit
+def shape_math(x):
+    return x * float(x.shape[0])  # shape is static under trace
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def static_arg(x, scale):
+    return x * float(scale)  # scale is static, float() runs at trace time
+
+
+@jax.jit
+def suppressed(x):
+    return int(x)  # reprolint: allow[host-sync] -- fixture: pragma suppression must work

@@ -1,0 +1,15 @@
+"""Fixture: clock uses the naked-clock rule must NOT flag."""
+import time
+
+
+def timed(fn):
+    # the blessed harness function itself must be allowed to read the clock
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def wall(fn):  # reprolint: allow[naked-clock] -- fixture: module-level wall time, not a device benchmark
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0

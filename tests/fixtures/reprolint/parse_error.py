@@ -1,0 +1,3 @@
+"""Fixture: does not parse; the linter must report parse-error, not crash."""
+def broken(:
+    return

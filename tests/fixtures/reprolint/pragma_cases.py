@@ -1,0 +1,27 @@
+"""Fixture: pragma meta-finding cases (bad-pragma / unused-pragma / def scope)."""
+import time
+
+
+def no_reason(fn):
+    return time.perf_counter()  # reprolint: allow[naked-clock]
+
+
+def unknown_rule(fn):
+    return time.perf_counter()  # reprolint: allow[no-such-rule] -- reason present but rule unknown
+
+
+def clean(x):
+    return x + 1  # reprolint: allow[naked-clock] -- suppresses nothing, must report unused-pragma
+
+
+def whole_body(fn):  # reprolint: allow[naked-clock] -- def-line pragma covers every clock read in the body
+    t0 = time.perf_counter()
+    fn()
+    t1 = time.perf_counter()
+    return t1 - t0
+
+
+def docstring_mention(fn):
+    """Strings that talk about `# reprolint: allow[naked-clock] -- x` are
+    not comments and must not register as pragmas (tokenize-based parse)."""
+    return fn()

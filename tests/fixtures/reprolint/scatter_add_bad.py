@@ -1,0 +1,6 @@
+"""Fixture: scatter-add the rule must flag."""
+import jax.numpy as jnp
+
+
+def loads(idx, w, e):
+    return jnp.zeros(e).at[idx].add(w)

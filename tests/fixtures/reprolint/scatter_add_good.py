@@ -1,0 +1,14 @@
+"""Fixture: .at[...] uses the scatter-add rule must NOT flag."""
+import jax.numpy as jnp
+
+
+def setter(idx, w, e):
+    return jnp.zeros(e).at[idx].set(w)  # .set is not .add
+
+
+def gathered(tbl, idx):
+    return tbl[idx].sum(axis=1)  # padded gather, the blessed pattern
+
+
+def suppressed(idx, w, e):
+    return jnp.zeros(e).at[idx].add(w)  # reprolint: allow[scatter-add] -- fixture: deliberate fallback

@@ -1,0 +1,12 @@
+"""Fixture: magic sentinel uses the sentinel rule must flag."""
+import numpy as np
+
+BIG = 32000
+
+
+def unreachable_pairs(dist):
+    return dist == -1
+
+
+def miss_table(n):
+    return np.full((n,), -1, dtype=np.int32)

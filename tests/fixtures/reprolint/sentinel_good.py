@@ -1,0 +1,20 @@
+"""Fixture: sentinel uses the rule must NOT flag."""
+import numpy as np
+
+from repro.core.graph import UNREACHABLE
+
+
+def unreachable_pairs(dist):
+    return dist == UNREACHABLE
+
+
+def dist_table(n):
+    return np.full((n,), UNREACHABLE, dtype=np.int16)
+
+
+def pad_table(n):
+    return np.full((n,), -1, dtype=np.int32)  # reprolint: allow[sentinel] -- fixture: -1 is an edge-id pad here
+
+
+def negative_math(x):
+    return x - 1, x * -1  # arithmetic -1, not a comparison or fill

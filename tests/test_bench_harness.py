@@ -1,0 +1,100 @@
+"""Benchmark harness contracts: `timed` must not read the clock before the
+device work lands, `emit` must feed the JSON report the runner writes, and
+the runner's saturation extraction must parse `sat=` derived values."""
+import json
+import os
+import sys
+import time
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:  # `benchmarks` is a namespace pkg at the root
+    sys.path.insert(0, REPO_ROOT)
+
+from benchmarks import common  # noqa: E402
+from benchmarks.run import _saturations, write_report  # noqa: E402
+
+
+class FakeAsyncResult:
+    """Mimics a dispatched-but-unfinished device array: the result only
+    'lands' when block_until_ready() is called, `delay` seconds after
+    creation.  jax.block_until_ready() calls the method on non-Array pytree
+    leaves, which is exactly the hook `timed` relies on."""
+
+    def __init__(self, delay: float):
+        self.ready_at = time.perf_counter() + delay
+        self.blocked = False
+
+    def block_until_ready(self):
+        time.sleep(max(0.0, self.ready_at - time.perf_counter()))
+        self.blocked = True
+        return self
+
+
+def test_timed_waits_for_device_work():
+    delay = 0.05
+    out, us = common.timed(lambda: FakeAsyncResult(delay))
+    assert out.blocked, "timed() must block on the result before the clock"
+    # the measured time must include the in-flight device work, not just
+    # the (instant) dispatch
+    assert us >= delay * 1e6 * 0.9
+
+
+def test_timed_repeats_average():
+    calls = []
+    _, us = common.timed(lambda: calls.append(0), repeats=4)
+    assert len(calls) == 4
+    assert us < 1e5  # per-call average, not the 4x total of a slow clock
+
+
+def test_emit_records_rows(capsys):
+    common.drain_rows()  # isolate from any earlier emits
+    common.emit("fig0.case", 12.34, "sat=0.5")
+    common.emit("fig0.other", 1.0, 7)
+    rows = common.drain_rows()
+    assert rows == [
+        {"name": "fig0.case", "us_per_call": 12.3, "derived": "sat=0.5"},
+        {"name": "fig0.other", "us_per_call": 1.0, "derived": "7"},
+    ]
+    assert common.drain_rows() == []  # drained
+    assert "fig0.case,12.3,sat=0.5" in capsys.readouterr().out
+
+
+def test_tier_names(monkeypatch):
+    monkeypatch.delenv("BENCH_SMOKE", raising=False)
+    monkeypatch.delenv("BENCH_LARGE", raising=False)
+    assert common.tier() == "FULL"
+    monkeypatch.setenv("BENCH_SMOKE", "1")
+    assert common.tier() == "SMOKE"
+    monkeypatch.setenv("BENCH_LARGE", "1")  # large wins over smoke
+    assert common.tier() == "LARGE"
+
+
+def test_saturation_extraction():
+    rows = [
+        {"name": "fig8.PF.uniform.min", "us_per_call": 1.0, "derived": "sat=0.975"},
+        {"name": "fig2.pf.q7", "us_per_call": 1.0, "derived": "k=8;eff=0.9"},
+        {"name": "fig8.bad", "us_per_call": 1.0, "derived": "sat=oops"},
+    ]
+    assert _saturations(rows) == {"fig8.PF.uniform.min": 0.975}
+
+
+def test_write_report_schema(tmp_path, monkeypatch):
+    monkeypatch.delenv("BENCH_SMOKE", raising=False)
+    monkeypatch.delenv("BENCH_LARGE", raising=False)
+    figures = {
+        "bench_fig8_saturation": {
+            "wall_s": 1.5,
+            "rows": [{"name": "fig8.PF.uniform.ugal", "us_per_call": 2.0,
+                      "derived": "sat=0.95"}],
+        },
+        "bench_fig2_moore": {"wall_s": 0.25, "rows": []},
+    }
+    path = str(tmp_path / "BENCH_FULL.json")
+    write_report(figures, path)
+    doc = json.loads(open(path).read())
+    assert doc["tier"] == "FULL"
+    assert doc["total_wall_s"] == pytest.approx(1.75)
+    assert doc["figures"]["bench_fig8_saturation"]["wall_s"] == 1.5
+    assert doc["saturations"] == {"fig8.PF.uniform.ugal": 0.95}

@@ -1,0 +1,160 @@
+"""reprolint: every rule must fire on its bad fixture, stay quiet on its
+good fixture, and honor pragmas; plus CLI / reporter / meta-finding
+contracts and the repo-wide zero-findings gate the CI lint job enforces."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.lint import DEFAULT_SCOPE, lint_paths, main
+from repro.analysis.pragmas import parse_pragmas
+from repro.analysis.report import render_json
+from repro.analysis.rules import ALL_RULES, RULES_BY_ID
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO_ROOT, "tests", "fixtures", "reprolint")
+
+# run a rule on arbitrary fixture paths regardless of the repo scope config
+WIDE = {r.id: (("*",), ()) for r in ALL_RULES}
+
+
+def run_rule(rule_id, fixture):
+    return lint_paths([os.path.join(FIXTURES, fixture)], scope=WIDE,
+                      select=[rule_id])
+
+
+# ---------------------------------------------------------------- rules
+
+@pytest.mark.parametrize("rule_id,bad,expected", [
+    ("dense-square", "dense_square_bad.py", 5),
+    ("scatter-add", "scatter_add_bad.py", 1),
+    ("host-sync", "host_sync_bad.py", 3),
+    ("naked-clock", "naked_clock_bad.py", 4),
+    ("compat-shim", "compat_shim_bad.py", 4),
+    ("sentinel", "sentinel_bad.py", 3),
+])
+def test_rule_fires_on_bad_fixture(rule_id, bad, expected):
+    res = run_rule(rule_id, bad)
+    assert len(res.findings) == expected, [f.location() for f in res.findings]
+    assert all(f.rule == rule_id for f in res.findings)
+    assert res.exit_code == 1
+
+
+@pytest.mark.parametrize("rule_id,good,n_suppressed", [
+    ("dense-square", "dense_square_good.py", 1),
+    ("scatter-add", "scatter_add_good.py", 1),
+    ("host-sync", "host_sync_good.py", 1),
+    ("naked-clock", "naked_clock_good.py", 2),
+    ("compat-shim", "compat_shim_good.py", 0),
+    ("sentinel", "sentinel_good.py", 1),
+])
+def test_rule_quiet_on_good_fixture(rule_id, good, n_suppressed):
+    res = run_rule(rule_id, good)
+    assert res.findings == [], [f.location() for f in res.findings]
+    assert res.suppressed == n_suppressed
+    assert res.exit_code == 0
+
+
+def test_dense_square_reference_exemption():
+    # dense_square_good.py's dense_reference() allocates [n, n] with no
+    # pragma; only the name-based exemption keeps it quiet
+    res = run_rule("dense-square", "dense_square_good.py")
+    assert res.findings == []
+
+
+def test_host_sync_static_argnames_not_traced():
+    # float(scale) with scale in static_argnames runs at trace time; the
+    # good fixture would fail collection-free only if the rule resolves
+    # static names (host_sync_good.py::static_arg)
+    res = run_rule("host-sync", "host_sync_good.py")
+    assert res.findings == []
+
+
+# -------------------------------------------------------------- pragmas
+
+def test_pragma_meta_findings():
+    res = lint_paths([os.path.join(FIXTURES, "pragma_cases.py")],
+                     scope=WIDE, select=["naked-clock"])
+    by_rule = {}
+    for f in res.findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    # reason-less pragma: reported AND does not suppress its line's finding
+    assert len(by_rule["bad-pragma"]) == 2  # no reason + unknown rule
+    assert any(f.rule == "naked-clock" and f.line == 6
+               for f in res.findings)
+    # pragma that suppresses nothing
+    assert len(by_rule["unused-pragma"]) == 1
+    # def-line pragma covers both clock reads in whole_body
+    assert res.suppressed == 2
+    assert not any(f.line > 17 for f in by_rule.get("naked-clock", []))
+
+
+def test_pragma_in_string_is_not_a_pragma():
+    src = 'MSG = "# reprolint: allow[sentinel] -- not a comment"\n'
+    assert parse_pragmas(src) == []
+    assert len(parse_pragmas("x = 1  # reprolint: allow[sentinel] -- r\n")) == 1
+
+
+def test_parse_error_is_a_finding():
+    res = lint_paths([os.path.join(FIXTURES, "parse_error.py")], scope=WIDE)
+    assert [f.rule for f in res.findings] == ["parse-error"]
+    assert res.exit_code == 1
+
+
+# ------------------------------------------------------------- reporters
+
+def test_json_reporter_schema():
+    res = run_rule("sentinel", "sentinel_bad.py")
+    doc = json.loads(render_json(res))
+    assert doc["exit_code"] == 1
+    assert doc["counts_by_rule"] == {"sentinel": 3}
+    assert doc["files_scanned"] == 1
+    assert {f["rule"] for f in doc["findings"]} == {"sentinel"}
+    assert all({"path", "line", "col", "rule", "message"} <= set(f)
+               for f in doc["findings"])
+
+
+# ------------------------------------------------------ CLI + repo gate
+
+def test_cli_lists_all_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for r in ALL_RULES:
+        assert r.id in out
+
+
+def test_cli_rejects_unknown_rule():
+    with pytest.raises(SystemExit):
+        main(["--select", "no-such-rule", FIXTURES])
+
+
+def test_repo_is_clean(monkeypatch):
+    """The acceptance gate: zero unsuppressed findings over the repo, and
+    every suppression that fired carries a reason (bad-pragma enforces the
+    reason, unused-pragma enforces 'that fired')."""
+    monkeypatch.chdir(REPO_ROOT)
+    res = lint_paths(["src", "benchmarks", "examples"])
+    assert res.findings == [], [f.location() + " " + f.message
+                                for f in res.findings]
+    assert res.suppressed > 0  # the discipline has documented exceptions
+
+
+def test_cli_module_runs_without_jax(monkeypatch):
+    """CI's lint job installs nothing: the linter must run on a bare
+    interpreter.  Simulate by hiding jax/numpy from a subprocess."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    code = ("import sys; "
+            "sys.modules['jax'] = None; sys.modules['numpy'] = None; "
+            "from repro.analysis.lint import main; "
+            "sys.exit(main(['src', 'benchmarks', 'examples']))")
+    proc = subprocess.run([sys.executable, "-c", code], cwd=REPO_ROOT,
+                          env=env, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_default_scope_covers_every_rule():
+    assert set(DEFAULT_SCOPE) == set(RULES_BY_ID)

@@ -1,0 +1,65 @@
+"""The fluid solver's scatter-add fallback (fluid.py `loads`, the
+("scatter",) branch) is a deliberate, reprolint-suppressed exception: it
+only runs when the padded incidence gather would blow memory on skewed
+incidence counts.  Pin down (a) that the fallback is reachable and agrees
+with the pad path, and (b) that the exception stays allowlisted."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.simulation import build_flow_paths, evaluate_load
+from repro.simulation import paths as paths_mod
+from repro.simulation.traffic import TrafficPattern
+
+
+@pytest.fixture(scope="module")
+def hot_dst_paths():
+    """All 56 non-d routers send to one destination d: every incoming link
+    of d carries ~F/deg flows, the skew that makes num_links * w_max large
+    relative to nnz."""
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    n = pf.graph.n
+    d = 0
+    src = np.array([v for v in range(n) if v != d], dtype=np.int32)
+    pat = TrafficPattern("hot_dst", src, np.full(len(src), d, np.int32),
+                         np.ones(len(src), np.float32),
+                         endpoints_per_router=1)
+    return rt, pat
+
+
+def _force_scatter(monkeypatch):
+    # with the cap at 0, the pad path is only taken when the padded matrix
+    # is within 4x of nnz; the hot-destination skew pushes it far beyond
+    monkeypatch.setattr(paths_mod, "_INC_PAD_MAX_ENTRIES", 0)
+
+
+def test_scatter_fallback_selected_and_equivalent(hot_dst_paths, monkeypatch):
+    rt, pat = hot_dst_paths
+    fp_pad = build_flow_paths(rt, pat, "min")
+    assert fp_pad.device_arrays()[1][0] == "pad"
+
+    _force_scatter(monkeypatch)
+    fp_sc = build_flow_paths(rt, pat, "min")
+    assert fp_sc.device_arrays()[1][0] == "scatter"
+
+    r_pad = evaluate_load(fp_pad, 0.5, iters=60)
+    r_sc = evaluate_load(fp_sc, 0.5, iters=60)
+    assert r_sc.max_util == pytest.approx(r_pad.max_util, rel=1e-5)
+    assert r_sc.mean_latency == pytest.approx(r_pad.mean_latency, rel=1e-5)
+    assert r_sc.mean_hops == pytest.approx(r_pad.mean_hops, rel=1e-5)
+
+
+def test_scatter_fallback_stays_allowlisted():
+    """The decision made for ISSUE 6 satellite 3: keep the fallback,
+    suppress the scatter-add finding with a written reason.  If someone
+    strips the pragma (or the reason), the repo-wide lint gate breaks --
+    this test points at the exact line and the intent."""
+    fluid_py = os.path.join(os.path.dirname(paths_mod.__file__), "fluid.py")
+    with open(fluid_py, encoding="utf-8") as fh:
+        lines = [ln for ln in fh if ".at[" in ln and ".add(" in ln]
+    assert len(lines) == 1, "exactly one scatter-add lives in fluid.py"
+    assert "reprolint: allow[scatter-add] --" in lines[0]
