@@ -1,0 +1,120 @@
+"""Blockwise executor scaling: sharded destination sweeps vs the host loop.
+
+The destination-blocked BFS sweep is where the blocked path builder spends
+its time at scale, so this bench measures exactly that axis: block
+throughput of `destination_blocks` through the shared blockwise executor
+(`repro.parallel.blockwise.run_blocks`) -- the sequential host reference
+vs the `shard_map` backend at 1 device and at every visible device.  On a
+stock CPU run only one XLA device exists and the curve collapses to one
+point; launch under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the CI test-job setting) to spread blocks over 8 host devices.  Each
+sharded `run_blocks` call traces + compiles its mapped function once, and
+that cost is deliberately inside the timed section (it is what a consumer
+pays), amortized over the sweep's blocks.
+
+The second half is the blocked fluid point: `build_blocked_routing` (known
+diameter 2, so no n-source sweep) -> destination-blocked path build ->
+saturation throughput, at the tier's PolarFly scale.  BENCH_LARGE=1 runs
+PF(157) -- 24 807 routers, radix 158, the ~25k-router point the roadmap
+targets -- where no [n, n] table (4.9 GB of int32 next hops alone) could
+ever be materialized.
+
+The fluid build's column sweeps then run on whichever (backend, devices)
+point the curve just measured as fastest -- on a many-core box that is
+the wide sharded mesh; on a 1-core container it is usually the 1-device
+sharded point (XLA's dense BFS beats the numpy host loop per block, but
+extra devices only grow the per-round working set when there is a single
+thread to serve them).
+
+  tier   topology    n       sweep sample        fluid flows
+  SMOKE  PF(13)      183     8 blocks of 8       2 000
+  FULL   PF(47)      2 257   32 blocks of 8      20 000
+  LARGE  PF(157)     24 807  24 blocks of 8      60 000
+
+Sampled-uniform saturations shrink with the sample (each sampled pair
+carries `p * n / F` demand, so fewer flows concentrate more load -- the
+same effect as fig10's 0.047 at PF(79)/60k flows), hence the tight
+bisection tolerance: at PF(157) the measured point sits in the few-percent
+range and tol=0.02 would round it to zero.
+"""
+import numpy as np
+
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_blocked_routing, destination_blocks
+from repro.parallel.blockwise import available_devices
+from repro.simulation import (build_flow_paths, make_pattern,
+                              saturation_throughput)
+
+from .common import emit, fw_iters, large, smoke, timed
+
+
+def _config():
+    """(q, dests per block, sweep blocks, fluid max_flows) for the tier."""
+    if large():
+        return 157, 8, 24, 60_000
+    if smoke():
+        return 13, 8, 8, 2_000
+    return 47, 8, 32, 20_000
+
+
+def _sweep(g, dests, block, backend, devices=None):
+    """Thunk consuming one full destination sweep (last column checksum
+    keeps the loop's outputs live without holding every block)."""
+    def go():
+        acc = 0
+        for _, _, nh_cols in destination_blocks(g, dests=dests, block=block,
+                                                backend=backend,
+                                                devices=devices):
+            acc += int(nh_cols[-1, -1])
+        return acc
+    return go
+
+
+def run():
+    q, block, nblocks, max_flows = _config()
+    pf = build_polarfly(q)
+    g = pf.graph
+    rng = np.random.default_rng(0)
+    dests = np.sort(rng.choice(g.n, size=block * nblocks, replace=False))
+
+    ref = None
+    ndev = available_devices()
+    curve = ["host"] + sorted({1, 2, 4, ndev} & set(range(1, ndev + 1)))
+    best = ("host", None, 0.0)
+    for dev in curve:
+        backend = "host" if dev == "host" else "sharded"
+        devices = None if dev == "host" else dev
+        acc, us = timed(_sweep(g, dests, block, backend, devices))
+        if ref is None:
+            ref = acc
+        assert acc == ref, f"backend {dev} diverged from host reference"
+        bps = nblocks / (us / 1e6)
+        if bps > best[2]:
+            best = (backend, devices, bps)
+        emit(f"blockwise.pf{q}.sweep.{dev}", us,
+             f"N={g.n};blocks={nblocks};block={block};"
+             f"blocks_per_s={bps:.3f};dests_per_s={bps * block:.1f}")
+
+    # blocked fluid point, column sweeps on the curve's fastest backend.
+    # PF diameter is 2 by construction (paper SIV), so the routing build
+    # skips the n-source BFS sweep entirely; block= keeps the sharded
+    # backend's per-device working set at the swept size
+    rt, rus = timed(lambda: build_blocked_routing(
+        g, block=block, diameter=2, backend=best[0], devices=best[1]))
+    emit(f"blockwise.pf{q}.routing", rus,
+         f"N={g.n};diam={rt.diameter};backend={best[0]};"
+         f"devices={best[1] or 1}")
+    pat = make_pattern("uniform", rt, p=(q + 1) // 2, seed=0,
+                       max_flows=max_flows)
+    fp, pus = timed(lambda: build_flow_paths(rt, pat, "min", k_candidates=8,
+                                             seed=0))
+    emit(f"blockwise.pf{q}.paths", pus, f"F={pat.num_flows}")
+    sat, us = timed(lambda: saturation_throughput(
+        fp, tol=0.005, iters=fw_iters("min"), engine="batched"))
+    emit(f"blockwise.pf{q}.fluid", us,
+         f"N={g.n};radix={g.params.get('radix', '?')};F={pat.num_flows};"
+         f"sat={sat:.3f}")
+
+
+if __name__ == "__main__":
+    run()

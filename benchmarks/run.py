@@ -6,6 +6,12 @@ BENCH_LARGE) next to the repo root -- or under $BENCH_JSON_DIR when set.
 The JSON carries per-figure wall times, every emitted row, and the
 measured saturation points extracted from `sat=` derived values, so runs
 can be diffed across commits without re-parsing stdout.
+
+When `benchmarks/baselines/BENCH_<TIER>.json` exists (the SMOKE baseline
+is committed), the run is diffed against it: any figure whose wall time
+regressed more than 25% prints a `# WARN` line.  Warnings never fail the
+run -- wall times on shared CI runners are noisy -- but they make a
+regression visible in the job log the moment it lands.
 """
 import importlib
 import json
@@ -33,7 +39,13 @@ BENCHES = [
     "bench_fabric",
     "bench_kernels",
     "bench_roofline",
+    "bench_blockwise_scaling",
 ]
+
+# Committed reference timings (per tier) the current run is diffed against.
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+REGRESSION_RATIO = 1.25
 
 
 def _saturations(rows) -> dict:
@@ -47,6 +59,29 @@ def _saturations(rows) -> dict:
             except ValueError:
                 pass
     return out
+
+
+def diff_against_baseline(figures: dict, tier: str,
+                          baseline_dir: str = BASELINE_DIR) -> list:
+    """`# WARN` lines for figures whose wall time regressed more than
+    `REGRESSION_RATIO` against the committed `BENCH_<tier>.json` baseline.
+    No baseline file (or no baseline entry for a figure -- new benches) is
+    not a warning: there is nothing to regress against.
+    """
+    path = os.path.join(baseline_dir, f"BENCH_{tier}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        base = json.load(fh).get("figures", {})
+    warns = []
+    for name in sorted(figures):
+        wall = figures[name]["wall_s"]
+        ref = base.get(name, {}).get("wall_s", 0)
+        if ref > 0 and wall > REGRESSION_RATIO * ref:
+            warns.append(f"# WARN {name}: wall {wall:.3f}s vs baseline "
+                         f"{ref:.3f}s ({wall / ref:.2f}x > "
+                         f"{REGRESSION_RATIO:.2f}x)")
+    return warns
 
 
 def write_report(figures: dict, path: str) -> None:
@@ -85,6 +120,8 @@ def main() -> None:  # reprolint: allow[naked-clock] -- times whole bench module
     out_dir = os.environ.get("BENCH_JSON_DIR", ".")
     write_report(figures, os.path.join(out_dir,
                                        f"BENCH_{common.tier()}.json"))
+    for warn in diff_against_baseline(figures, common.tier()):
+        print(warn, flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

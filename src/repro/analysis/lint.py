@@ -31,23 +31,30 @@ _SIM_PATH_MODULES = (
     "src/repro/core/metrics.py",
     "src/repro/simulation/paths.py",
     "src/repro/simulation/fluid.py",
+    "src/repro/parallel/blockwise.py",
 )
 DEFAULT_SCOPE: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
-    # the four modules PR 3/4 scrubbed of [n, n] materialization
+    # the modules PR 3/4 scrubbed of [n, n] materialization, plus the
+    # blockwise executor all their streaming loops now run through
     "dense-square": (_SIM_PATH_MODULES, ()),
     # anything the fluid solver or graph core executes per-iteration
-    "scatter-add": (("src/repro/simulation/*.py", "src/repro/core/*.py"),
+    "scatter-add": (("src/repro/simulation/*.py", "src/repro/core/*.py",
+                     "src/repro/parallel/blockwise.py"),
                     ()),
     # jit bodies can appear anywhere (kernels, solver, launch)
     "host-sync": (("*",), ()),
     # benchmark timing discipline
     "naked-clock": (("benchmarks/*.py",), ()),
-    # the two files that OWN the version guards are the only exceptions
+    # the two files that OWN the version guards are the only exceptions --
+    # blockwise.py stays in scope: it reaches shard_map strictly through
+    # the compat shim (`from .compat import shard_map`)
     "compat-shim": (("*",),
                     ("src/repro/parallel/compat.py",
                      "src/repro/launch/mesh.py")),
-    # everywhere UNREACHABLE is the law: graph core + simulation
-    "sentinel": (("src/repro/core/*.py", "src/repro/simulation/*.py"), ()),
+    # everywhere UNREACHABLE is the law: graph core + simulation + the
+    # blockwise executor they stream through
+    "sentinel": (("src/repro/core/*.py", "src/repro/simulation/*.py",
+                  "src/repro/parallel/blockwise.py"), ()),
 }
 
 ScopeConfig = Dict[str, Tuple[Sequence[str], Sequence[str]]]

@@ -31,7 +31,8 @@ __all__ = [
 
 
 def diameter_and_aspl(g: Graph, dist: Optional[np.ndarray] = None,
-                      engine: str = "auto") -> Tuple[int, float]:
+                      engine: str = "auto", backend: str = "auto",
+                      devices: Optional[int] = None) -> Tuple[int, float]:
     """(diameter, average shortest path length) over connected pairs.
 
     Returns diameter = -1 for a disconnected graph (paper footnote 1: the
@@ -39,11 +40,15 @@ def diameter_and_aspl(g: Graph, dist: Optional[np.ndarray] = None,
     and the sparse engine selected (auto above the dense threshold), the
     reduction streams over blocked-BFS source blocks and never materializes
     an [n, n] matrix; sums stay in exact integer arithmetic, so both engines
-    return identical values.
+    return identical values.  `backend`/`devices` pass through to
+    `distance_blocks` on the streaming path (the blockwise executor's host
+    loop vs `shard_map` over source blocks -- bit-identical, so the exact
+    integer sums are preserved either way).
     """
     if dist is None and _resolve_engine(engine, g.n) == "sparse":
         diam, total, pairs = 0, 0, 0
-        for srcs, db, _ in distance_blocks(g):
+        for srcs, db, _ in distance_blocks(g, backend=backend,
+                                           devices=devices):
             if (db == UNREACHABLE).any():  # diagonal is 0, so any hit is real
                 return int(UNREACHABLE), float("inf")
             diam = max(diam, int(db.max()))

@@ -48,6 +48,17 @@ tables, on intact and damaged graphs.  `distance_blocks` additionally exposes
 the sparse engine as a streaming iterator so metrics (diameter / ASPL,
 resilience sweeps) never need to materialize an [n, n] table at all.
 
+The block loops themselves run on the shared blockwise executor
+(`repro.parallel.blockwise.run_blocks`): ``backend="host"`` is the
+sequential reference loop, ``backend="sharded"`` places independent
+source/destination blocks on separate jax devices via `shard_map` (one
+block per device per round; a JAX-traceable twin of `_bfs_block` does the
+per-block work), and ``backend="auto"`` stays on the host loop unless a
+multi-device mesh is requested via ``devices``.  Backends are bit-identical
+(tests/test_blockwise.py asserts it under 8 forced host devices), so every
+consumer -- `sparse_routing_tables`, `destination_blocks`, the metrics
+streams, the blocked path builder -- is backend-blind.
+
 Destination-blocked consumption
 -------------------------------
 The flow-path builders walk next hops *toward* a flow's destination, i.e.
@@ -72,6 +83,9 @@ import numpy as np
 
 from .graph import Graph, UNREACHABLE
 from .polarfly import PolarFly
+from ..parallel.blockwise import (DEFAULT_BUDGET_BYTES, available_devices,
+                                  block_size_for_budget, peak_bytes,
+                                  plan_blocks, run_blocks)
 
 __all__ = [
     "UNREACHABLE",
@@ -105,8 +119,9 @@ _DENSE_MAX_N = 2048
 _INT16_INF = np.int16(np.iinfo(np.int16).max)
 
 # Default working-set budget for the blocked BFS (transient arrays only; the
-# caller's output tables are on top of this).
-_BFS_BUDGET_BYTES = 512 * 2 ** 20
+# caller's output tables are on top of this).  Owned by the shared blockwise
+# core now; the historical name stays because callers/tests pin it.
+_BFS_BUDGET_BYTES = DEFAULT_BUDGET_BYTES
 
 
 # ----------------------------------------------------------------------------
@@ -129,10 +144,11 @@ def bfs_block_size(n: int, e_dir: int,
     """Sources per blocked-BFS batch so the working set fits `budget_bytes`.
 
     Always returns at least 1 (a single source is the floor the streaming
-    engine can run at) and never more than n.
+    engine can run at) and never more than n.  Delegates to the shared
+    accounting helper in `repro.parallel.blockwise`.
     """
-    per = _bfs_bytes_per_source(n, e_dir)
-    return int(min(max(n, 1), max(1, budget_bytes // max(per, 1))))
+    return block_size_for_budget(n, _bfs_bytes_per_source(n, e_dir),
+                                 budget_bytes)
 
 
 def bfs_peak_bytes(n: int, e_dir: int, block: int,
@@ -141,7 +157,8 @@ def bfs_peak_bytes(n: int, e_dir: int, block: int,
     transient working set + whichever [n, n] output tables are materialized
     (int16 distances and/or int32 next hops; streaming callers pass False)."""
     out = n * n * ((2 if dist_table else 0) + (4 if next_hop else 0))
-    return block * _bfs_bytes_per_source(n, e_dir) + out
+    return peak_bytes(block, _bfs_bytes_per_source(n, e_dir),
+                      resident_bytes=out)
 
 
 def _bfs_block(indptr: np.ndarray, indices: np.ndarray, sources: np.ndarray,
@@ -201,34 +218,123 @@ def _bfs_block(indptr: np.ndarray, indices: np.ndarray, sources: np.ndarray,
     return dist, nh
 
 
+def _bfs_device_fn(g: Graph, want_next_hop: bool):
+    """JAX-traceable twin of `_bfs_block` for `run_blocks`' sharded backend.
+
+    Same frontier BFS in a dense-gather formulation: level d gathers every
+    node's padded-neighbor frontier membership ([B, n, deg_max] bool) and
+    discovers the nodes with any frontier neighbor; first-hop labels
+    propagate as the minimum label over discovering neighbors (level 1
+    seeds each discovered node with its own id), which is the same set-min
+    the host engine computes via its segmented sort -- the discovering
+    edges of w are exactly the frontier neighbors of w on an undirected
+    graph -- so outputs are bit-identical.  Returns None (callers fall
+    back to the host loop) when jax is unavailable or the graph has no
+    edges.
+    """
+    try:
+        import jax
+        import jax.numpy as jnp
+    except Exception:  # pragma: no cover - jax is a hard dep in this repo
+        return None
+    nb, _ = g.padded_neighbors
+    n, dmax = nb.shape
+    if dmax == 0:
+        return None
+    pres = jnp.asarray(nb >= 0)[None, :, :]
+    snb = jnp.asarray(np.where(nb >= 0, nb, 0).astype(np.int32))
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    def fn(sources):
+        b = sources.shape[0]
+        rows = jnp.arange(b)
+        src = sources.astype(jnp.int32)
+        dist0 = jnp.full((b, n), UNREACHABLE,
+                         dtype=jnp.int16).at[rows, src].set(jnp.int16(0))
+        front0 = jnp.zeros((b, n), dtype=bool).at[rows, src].set(True)
+        if want_next_hop:
+            nh0 = jnp.full((b, n), UNREACHABLE,
+                           dtype=jnp.int32).at[rows, src].set(src)
+            state = (jnp.int16(0), dist0, front0, nh0)
+        else:
+            state = (jnp.int16(0), dist0, front0)
+
+        def cond(s):
+            return s[2].any()
+
+        def body(s):
+            d = s[0] + jnp.int16(1)
+            dist, front = s[1], s[2]
+            fr_nb = front[:, snb] & pres  # [B, n, deg_max]
+            newly = fr_nb.any(axis=2) & (dist == UNREACHABLE)
+            dist = jnp.where(newly, d, dist)
+            if not want_next_hop:
+                return d, dist, newly
+            nh = s[3]
+            lab = jnp.where(fr_nb, nh[:, snb], jnp.int32(n))
+            cand = jnp.where(d == jnp.int16(1), ids[None, :],
+                             lab.min(axis=2))
+            return d, dist, newly, jnp.where(newly, cand, nh)
+
+        out = jax.lax.while_loop(cond, body, state)
+        return (out[1], out[3]) if want_next_hop else (out[1],)
+
+    return fn
+
+
+def _resolve_devices(backend: str, devices: Optional[int]) -> int:
+    """`devices=None` means every visible device under backend="sharded"
+    and a single device (-> host loop) otherwise."""
+    if devices is not None:
+        return int(devices)
+    return available_devices() if backend == "sharded" else 1
+
+
 def distance_blocks(g: Graph, block: Optional[int] = None,
                     next_hop: bool = False,
                     budget_bytes: int = _BFS_BUDGET_BYTES,
+                    backend: str = "auto", devices: Optional[int] = None,
                     ) -> Iterator[Tuple[np.ndarray, np.ndarray,
                                         Optional[np.ndarray]]]:
     """Stream the sparse engine: yields (sources, dist [B, n] int16,
     first_hop [B, n] int32 or None) per source block.
 
     Lets metrics consume all-pairs information in O(block * (n + E)) memory
-    without ever materializing an [n, n] table.
+    without ever materializing an [n, n] table.  `backend`/`devices` select
+    the blockwise executor backend: "host" is the sequential reference
+    loop, "sharded" runs one block per jax device (bit-identical; degrades
+    to the host loop on edge-free graphs), and "auto" (the default) stays
+    on the host loop unless `devices > 1` is requested.
     """
     indptr, indices = g.csr
     if block is None:
         block = bfs_block_size(g.n, len(indices), budget_bytes)
-    for lo in range(0, g.n, block):
-        srcs = np.arange(lo, min(lo + block, g.n))
+    ndev = _resolve_devices(backend, devices)
+    plan = plan_blocks(g.n, block=block, devices=ndev)
+
+    def host_fn(srcs):
         dist, nh = _bfs_block(indptr, indices, srcs, next_hop)
-        yield srcs, dist, nh
+        return (dist, nh) if next_hop else (dist,)
+
+    device_fn = (_bfs_device_fn(g, next_hop)
+                 if backend == "sharded" or ndev > 1 else None)
+    for srcs, outs in run_blocks(
+            np.arange(g.n, dtype=np.int64), plan, host_fn, device_fn,
+            backend="host" if device_fn is None else backend):
+        yield srcs, outs[0], outs[1] if next_hop else None
 
 
 def sparse_routing_tables(g: Graph, block: Optional[int] = None,  # reprolint: allow[dense-square] -- contract IS the full [n, n] table pair; built block-by-block, only the output is dense
+                          backend: str = "auto",
+                          devices: Optional[int] = None,
                           ) -> Tuple[np.ndarray, np.ndarray]:
     """Full ([n, n] int16 distances, [n, n] int32 next hops) via the blocked
     BFS engine; bit-identical to the dense `all_pairs_distances` +
-    `next_hop_table` pair."""
+    `next_hop_table` pair on either executor backend."""
     dist = np.empty((g.n, g.n), dtype=np.int16)
     nh = np.empty((g.n, g.n), dtype=np.int32)
-    for srcs, db, nb in distance_blocks(g, block, next_hop=True):
+    for srcs, db, nb in distance_blocks(g, block, next_hop=True,
+                                        backend=backend, devices=devices):
         dist[srcs] = db
         nh[srcs] = nb
     return dist, nh
@@ -255,35 +361,37 @@ def dest_block_size(n: int, e_dir: int, deg_max: int,
                     budget_bytes: int = _BFS_BUDGET_BYTES) -> int:
     """Destinations per `destination_blocks` batch so the working set fits
     `budget_bytes`; at least 1, at most n (same contract as
-    `bfs_block_size`)."""
-    per = _dest_bytes_per_target(n, e_dir, deg_max)
-    return int(min(max(n, 1), max(1, budget_bytes // max(per, 1))))
+    `bfs_block_size`; same shared accounting helper)."""
+    return block_size_for_budget(n, _dest_bytes_per_target(n, e_dir, deg_max),
+                                 budget_bytes)
 
 
 def dest_block_peak_bytes(n: int, e_dir: int, deg_max: int,
                           block: int) -> int:
     """Estimated peak transient bytes of one destination block (no [n, n]
     output exists on this path -- consumers hold per-flow arrays only)."""
-    return block * _dest_bytes_per_target(n, e_dir, deg_max)
+    return peak_bytes(block, _dest_bytes_per_target(n, e_dir, deg_max))
 
 
-def _next_hop_columns(nb: np.ndarray, dests: np.ndarray,
-                      dist_rows: np.ndarray) -> np.ndarray:
-    """Next-hop columns toward each destination of a block.
+def _next_hop_rows(nb: np.ndarray, dests: np.ndarray,
+                   dist_rows: np.ndarray) -> np.ndarray:
+    """Next-hop columns toward each destination of a block, row-major.
 
     `dist_rows` is [B, n] int16 from a BFS rooted at each destination (equal
-    to dist[:, dests].T on an undirected graph).  Returns [n, B] int32 where
-    column b holds nh[:, dests[b]]: for every u the lowest-id neighbor v with
+    to dist[:, dests].T on an undirected graph).  Returns [B, n] int32 where
+    row b holds nh[:, dests[b]]: for every u the lowest-id neighbor v with
     dist(v, d) == dist(u, d) - 1, which is exactly the dense
     `next_hop_table`'s argmin-with-first-occurrence tie break (neighbor rows
-    are sorted).  nh[d, d] = d; unreachable -> UNREACHABLE.
+    are sorted).  nh[d, d] = d; unreachable -> UNREACHABLE.  Block-leading
+    so the blockwise executor can stack rows; `destination_blocks`
+    transposes to the column view consumers expect.
     """
     b, n = dist_rows.shape
     rows_b = np.arange(b)
     if nb.shape[1] == 0:  # edge-free graph: only the diagonal is routable
         nh = np.full((b, n), UNREACHABLE, dtype=np.int32)
         nh[rows_b, dests] = dests
-        return np.ascontiguousarray(nh.T)
+        return nh
     present = nb >= 0
     safe_nb = np.where(present, nb, 0)
     dist_nb = dist_rows[:, safe_nb]  # [B, n, deg_max]
@@ -296,12 +404,50 @@ def _next_hop_columns(nb: np.ndarray, dests: np.ndarray,
     nh = np.where(any_good, nb[np.arange(n)[None, :], first],
                   np.int32(UNREACHABLE)).astype(np.int32)
     nh[rows_b, dests] = dests
-    return np.ascontiguousarray(nh.T)
+    return nh
+
+
+def _next_hop_columns(nb: np.ndarray, dests: np.ndarray,
+                      dist_rows: np.ndarray) -> np.ndarray:
+    """Column-major [n, B] view of `_next_hop_rows` (the historical
+    shape of this helper)."""
+    return np.ascontiguousarray(_next_hop_rows(nb, dests, dist_rows).T)
+
+
+def _dest_device_fn(g: Graph):
+    """Device twin of one `destination_blocks` block for the sharded
+    backend: the no-next-hop BFS plus the `_next_hop_rows` column
+    derivation, both traced.  None when the host fallback applies."""
+    bfs = _bfs_device_fn(g, False)
+    if bfs is None:
+        return None
+    import jax.numpy as jnp
+    nb, _ = g.padded_neighbors
+    n = nb.shape[0]
+    pres = jnp.asarray(nb >= 0)[None, :, :]
+    nbj = jnp.asarray(nb.astype(np.int32))
+    snb = jnp.asarray(np.where(nb >= 0, nb, 0).astype(np.int32))
+    cols = jnp.arange(n)[None, :]
+
+    def fn(dests):
+        (dist_rows,) = bfs(dests)
+        rows_b = jnp.arange(dist_rows.shape[0])
+        dist_nb = dist_rows[:, snb]  # [B, n, deg_max]
+        good = ((dist_nb == (dist_rows - jnp.int16(1))[:, :, None])
+                & pres & (dist_rows > 0)[:, :, None])
+        nh = jnp.where(good.any(axis=2), nbj[cols, good.argmax(axis=2)],
+                       jnp.int32(UNREACHABLE))
+        d32 = dests.astype(jnp.int32)
+        return dist_rows, nh.at[rows_b, d32].set(d32)
+
+    return fn
 
 
 def destination_blocks(g: Graph, dests: Optional[np.ndarray] = None,
                        block: Optional[int] = None,
                        budget_bytes: int = _BFS_BUDGET_BYTES,
+                       backend: str = "auto",
+                       devices: Optional[int] = None,
                        ) -> Iterator[Tuple[np.ndarray, np.ndarray,
                                            np.ndarray]]:
     """Stream routing state one destination block at a time: yields
@@ -312,6 +458,9 @@ def destination_blocks(g: Graph, dests: Optional[np.ndarray] = None,
     ``next_hop_table(g)[:, dests_blk[b]]`` columns; only destinations that
     appear in `dests` (default: all n) are ever computed, so sampled-flow
     workloads pay for the destinations they use and nothing else.
+    `backend`/`devices` select the blockwise executor backend exactly as in
+    `distance_blocks` -- the destination BFS is where the blocked path
+    builder spends its time at scale, so sharding happens here.
     """
     indptr, indices = g.csr
     nb, _ = g.padded_neighbors
@@ -320,11 +469,20 @@ def destination_blocks(g: Graph, dests: Optional[np.ndarray] = None,
     dests = np.asarray(dests, dtype=np.int64).ravel()
     if block is None:
         block = dest_block_size(g.n, len(indices), nb.shape[1], budget_bytes)
-    for lo in range(0, len(dests), block):
-        dblk = dests[lo:lo + block]
+    ndev = _resolve_devices(backend, devices)
+    plan = plan_blocks(len(dests), block=block, devices=ndev)
+
+    def host_fn(dblk):
         dist_rows, _ = _bfs_block(indptr, indices, dblk, False)
+        return dist_rows, _next_hop_rows(nb, dblk, dist_rows)
+
+    device_fn = (_dest_device_fn(g)
+                 if backend == "sharded" or ndev > 1 else None)
+    for dblk, (dist_rows, nh_rows) in run_blocks(
+            dests, plan, host_fn, device_fn,
+            backend="host" if device_fn is None else backend):
         yield (dblk, np.ascontiguousarray(dist_rows.T),
-               _next_hop_columns(nb, dblk, dist_rows))
+               np.ascontiguousarray(nh_rows.T))
 
 
 @dataclass
@@ -342,16 +500,22 @@ class BlockedRouting:
     graph: Graph
     diameter: int
     block: int  # default destinations per block
+    backend: str = "auto"  # blockwise executor backend for column sweeps
+    devices: Optional[int] = None  # mesh width for backend="sharded"
 
     def dest_blocks(self, dests: Optional[np.ndarray] = None,
                     block: Optional[int] = None,
                     ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
         return destination_blocks(self.graph, dests,
-                                  self.block if block is None else block)
+                                  self.block if block is None else block,
+                                  backend=self.backend, devices=self.devices)
 
 
 def build_blocked_routing(g: Graph, block: Optional[int] = None,
                           budget_bytes: int = _BFS_BUDGET_BYTES,
+                          diameter: Optional[int] = None,
+                          backend: str = "auto",
+                          devices: Optional[int] = None,
                           ) -> BlockedRouting:
     """Streaming counterpart of `build_routing`: computes the diameter via
     `distance_blocks` (never holding an [n, n] table) and returns a
@@ -360,16 +524,25 @@ def build_blocked_routing(g: Graph, block: Optional[int] = None,
     Same disconnected-graph semantics as `build_routing`: the diameter is
     the largest *finite* distance (UNREACHABLE = -1 never wins the max), and
     path extraction through the blocked builder raises on unreachable
-    pairs.
+    pairs.  Constructions with a known diameter (any intact ER_q is 2 by
+    §IV; PolarStar is 3) can pass `diameter=` to skip the n-source BFS
+    sweep -- at PF(157) scale (n = 24807) that sweep costs more than the
+    path build it unlocks.  `backend`/`devices` carry through to every
+    column sweep the returned state serves.
     """
-    diam = 0
-    for _, db, _ in distance_blocks(g, budget_bytes=budget_bytes):
-        diam = max(diam, int(db.max()))
+    if diameter is None:
+        diam = 0
+        for _, db, _ in distance_blocks(g, budget_bytes=budget_bytes,
+                                        backend=backend, devices=devices):
+            diam = max(diam, int(db.max()))
+    else:
+        diam = int(diameter)
     if block is None:
         _, indices = g.csr
         block = dest_block_size(g.n, len(indices),
                                 g.padded_neighbors[0].shape[1], budget_bytes)
-    return BlockedRouting(graph=g, diameter=diam, block=block)
+    return BlockedRouting(graph=g, diameter=diam, block=block,
+                          backend=backend, devices=devices)
 
 
 def _resolve_engine(engine: str, n: int) -> str:

@@ -1,3 +1,23 @@
-"""Distribution: sharding rules, mesh helpers, pipeline stage option."""
-from .sharding import (AxisRules, DEFAULT_RULES, spec_for,  # noqa: F401
-                       tree_specs_to_shardings, mesh_axis_sizes, batch_axes)
+"""Distribution: blockwise execution core, sharding rules, mesh helpers.
+
+`blockwise` (and this package) import without jax -- the numpy-only core
+modules depend on the blockwise executor, and jax only loads when the
+sharded backend actually runs.  The sharding-rule names re-exported from
+`.sharding` DO import jax, so they resolve lazily (PEP 562) instead of
+eagerly at package-import time.
+"""
+
+from . import blockwise  # noqa: F401  (jax-free by design)
+
+_SHARDING_NAMES = ("AxisRules", "DEFAULT_RULES", "spec_for",
+                   "tree_specs_to_shardings", "mesh_axis_sizes",
+                   "batch_axes")
+
+__all__ = ["blockwise", *_SHARDING_NAMES]
+
+
+def __getattr__(name):
+    if name in _SHARDING_NAMES:
+        from . import sharding
+        return getattr(sharding, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,237 @@
+"""Shared blockwise execution core for the streaming engines.
+
+PRs 3-5 grew three structurally identical blocked loops: the
+source-blocked BFS (`repro.core.routing.distance_blocks`), the
+destination-blocked path builder (`repro.simulation.paths`,
+``engine="blocked"``), and chunked fluid assembly
+(`FlowPaths.concat` / `build_flow_paths_chunks`).  Each sizes a block
+from a byte budget, loops over blocks in Python, does per-block array
+work, and streams the results to a consumer.  This module owns that
+pattern once:
+
+* `BlockPlan` -- the block axis: total item count, items per block
+  (sized via `block_size_for_budget`), and the device count the sharded
+  backend pads block groups to.
+* `run_blocks` -- the executor, with two backends that must agree
+  bit-exactly (the same two-engine discipline as every other pairing in
+  this repo):
+
+    - ``backend="host"`` -- the reference: a sequential Python loop
+      calling `host_fn(items_blk)` per block.
+    - ``backend="sharded"`` -- `device_fn` (a JAX-traceable analogue of
+      `host_fn`) runs on `plan.devices` devices at once via `shard_map`
+      (through `repro.parallel.compat`, never imported from jax
+      directly): each round stacks one block per device, pads short
+      blocks by repeating their last item (rows are independent, and
+      padded rows are dropped before yielding), and jits the mapped
+      function once per `run_blocks` call.
+
+  Both backends yield ``(items_blk, outputs)`` in block order, so
+  consumers are backend-blind.
+
+* `block_size_for_budget` / `peak_bytes` -- the one byte-accounting
+  helper pair behind `bfs_block_size`/`bfs_peak_bytes`,
+  `dest_block_size`/`dest_block_peak_bytes`, and
+  `blocked_paths_peak_bytes` (previously three near-identical copies).
+
+This module imports jax lazily (only when the sharded backend actually
+runs), so the numpy-only core modules can depend on it without pulling
+jax at import time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "DEFAULT_BUDGET_BYTES",
+    "BlockPlan",
+    "plan_blocks",
+    "block_size_for_budget",
+    "peak_bytes",
+    "available_devices",
+    "run_blocks",
+]
+
+# Default transient working-set budget shared by every blocked engine
+# (routing aliases this as its historical `_BFS_BUDGET_BYTES` name).
+DEFAULT_BUDGET_BYTES = 512 * 2 ** 20
+
+
+def block_size_for_budget(total: int, per_item_bytes: int,
+                          budget_bytes: int = DEFAULT_BUDGET_BYTES) -> int:
+    """Items per block so the transient working set fits `budget_bytes`.
+
+    Always at least 1 (a single item is the floor every streaming engine
+    can run at -- arbitrarily small budgets degrade throughput, never
+    correctness) and never more than `total`.
+    """
+    return int(min(max(total, 1),
+                   max(1, budget_bytes // max(per_item_bytes, 1))))
+
+
+def peak_bytes(block: int, per_item_bytes: int,
+               resident_bytes: int = 0) -> int:
+    """Estimated peak bytes of a blocked run: one block's transient
+    working set plus whatever stays resident across blocks (output
+    tables, per-flow arrays; streaming consumers pass 0)."""
+    return block * per_item_bytes + resident_bytes
+
+
+@dataclass(frozen=True)
+class BlockPlan:
+    """The block axis of a blocked computation.
+
+    `total` items split into ceil(total / block) blocks; every block has
+    exactly `block` items except a possibly short tail.  The sharded
+    backend runs `devices` blocks per round (padding the tail round by
+    repeating its last block), so `devices` is the mesh width it targets
+    -- the host backend ignores it.
+    """
+
+    total: int
+    block: int
+    devices: int = 1
+
+    def __post_init__(self):
+        if self.total < 0 or self.block < 1 or self.devices < 1:
+            raise ValueError(
+                f"invalid BlockPlan(total={self.total}, block={self.block}, "
+                f"devices={self.devices})")
+
+    @property
+    def num_blocks(self) -> int:
+        return -(-self.total // self.block) if self.total else 0
+
+    @property
+    def num_rounds(self) -> int:
+        """Sharded-backend rounds: ceil(num_blocks / devices)."""
+        return -(-self.num_blocks // self.devices)
+
+    def bounds(self, i: int) -> Tuple[int, int]:
+        """[lo, hi) item range of block i."""
+        lo = i * self.block
+        return lo, min(lo + self.block, self.total)
+
+
+def plan_blocks(total: int, per_item_bytes: Optional[int] = None,
+                budget_bytes: int = DEFAULT_BUDGET_BYTES,
+                block: Optional[int] = None, devices: int = 1) -> BlockPlan:
+    """Build a `BlockPlan`, sizing the block from a byte budget unless an
+    explicit `block` is given (same precedence every blocked engine uses)."""
+    if block is None:
+        if per_item_bytes is None:
+            raise ValueError("plan_blocks needs per_item_bytes or block")
+        block = block_size_for_budget(total, per_item_bytes, budget_bytes)
+    return BlockPlan(total=total, block=int(block), devices=int(devices))
+
+
+def available_devices() -> int:
+    """Visible jax device count; 1 when jax is unavailable.  On CPU the
+    count follows ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    try:
+        import jax
+        return len(jax.devices())
+    except Exception:  # jax missing or uninitializable: host loop only
+        return 1
+
+
+def _as_tuple(out) -> tuple:
+    return out if isinstance(out, tuple) else (out,)
+
+
+def _resolve_backend(backend: str, plan: BlockPlan, device_fn) -> str:
+    if backend not in ("auto", "host", "sharded"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "sharded":
+        if device_fn is None:
+            raise ValueError("backend='sharded' requires a device_fn")
+        return "sharded"
+    if backend == "host" or device_fn is None:
+        return "host"
+    # auto: shard only when a multi-device mesh was requested AND exists,
+    # and there is more than one block to spread -- otherwise the host
+    # loop is both the reference and the fastest option.
+    if plan.devices > 1 and plan.num_blocks > 1 and available_devices() > 1:
+        return "sharded"
+    return "host"
+
+
+def _run_host(items: np.ndarray, plan: BlockPlan,
+              host_fn: Callable) -> Iterator[Tuple[np.ndarray, tuple]]:
+    for i in range(plan.num_blocks):
+        lo, hi = plan.bounds(i)
+        blk = items[lo:hi]
+        yield blk, _as_tuple(host_fn(blk))
+
+
+def _run_sharded(items: np.ndarray, plan: BlockPlan,
+                 device_fn: Callable) -> Iterator[Tuple[np.ndarray, tuple]]:
+    """One block per device per round; the mapped function is jitted once
+    per `run_blocks` call and reused across rounds (block shapes are
+    padded to a constant [devices, block], so there is one trace)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec
+
+    from .compat import shard_map
+
+    ndev = max(1, min(plan.devices, len(jax.devices())))
+    mesh = Mesh(np.asarray(jax.devices()[:ndev]), ("blocks",))
+    spec = PartitionSpec("blocks")
+
+    def _per_device(idx):  # [1, block] -> tuple of [1, block-leading] outputs
+        return tuple(o[None] for o in _as_tuple(device_fn(idx[0])))
+
+    mapped = jax.jit(shard_map(_per_device, mesh=mesh, in_specs=spec,
+                               out_specs=spec))
+
+    for r in range(plan.num_rounds):
+        first = r * ndev
+        blocks = []
+        for j in range(ndev):
+            lo, hi = plan.bounds(min(first + j, plan.num_blocks - 1))
+            blk = items[lo:hi]
+            if len(blk) < plan.block:  # pad short tail: rows independent
+                blk = np.concatenate(
+                    [blk, np.repeat(blk[-1:], plan.block - len(blk))])
+            blocks.append(blk)
+        outs = mapped(jnp.asarray(np.stack(blocks)))
+        outs = tuple(np.asarray(o) for o in outs)  # one host sync per round
+        for j in range(min(ndev, plan.num_blocks - first)):
+            lo, hi = plan.bounds(first + j)
+            yield items[lo:hi], tuple(o[j, :hi - lo] for o in outs)
+
+
+def run_blocks(items: Sequence, plan: BlockPlan, host_fn: Callable,
+               device_fn: Optional[Callable] = None,
+               backend: str = "auto") -> Iterator[Tuple[np.ndarray, tuple]]:
+    """Stream ``(items_blk, outputs)`` per block, in block order.
+
+    `items` is the 1-D array being blocked (source ids, destination ids,
+    flow indices, ...).  `host_fn(items_blk)` is the numpy reference; it
+    may return a single value or a tuple (normalized to a tuple either
+    way -- non-array returns such as FlowPaths chunks are passed through
+    untouched by the host backend).  `device_fn` is its JAX-traceable
+    twin operating on a full-size [block] index array, returning arrays
+    with a leading block axis; rows must be independent, because the
+    sharded backend pads short blocks by repeating rows and then drops
+    the padded outputs.
+
+    ``backend="auto"`` runs sharded only when `plan.devices > 1`, more
+    than one device is actually visible, there is more than one block,
+    and a `device_fn` exists; everything else falls back to the host
+    loop, so single-device environments always take the reference path.
+    """
+    items = np.asarray(items)
+    if plan.total != len(items):
+        raise ValueError(f"plan.total={plan.total} != len(items)={len(items)}")
+    if plan.total == 0:
+        return
+    if _resolve_backend(backend, plan, device_fn) == "host":
+        yield from _run_host(items, plan, host_fn)
+    else:
+        yield from _run_sharded(items, plan, device_fn)

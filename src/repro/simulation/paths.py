@@ -46,18 +46,20 @@ tests/test_simulation.py and tests/test_blocked_paths.py.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.graph import Graph, UNREACHABLE
 from ..core.routing import (RoutingTables, dest_block_peak_bytes,
                             minimal_path, minimal_paths)
+from ..parallel.blockwise import (DEFAULT_BUDGET_BYTES, block_size_for_budget,
+                                  peak_bytes, plan_blocks, run_blocks)
 from .traffic import TrafficPattern
 
 __all__ = ["DirectedEdges", "FlowPaths", "build_directed_edges",
-           "build_flow_paths", "build_flow_paths_reference",
-           "blocked_paths_peak_bytes"]
+           "build_flow_paths", "build_flow_paths_chunks",
+           "build_flow_paths_reference", "blocked_paths_peak_bytes"]
 
 # Absolute padded-incidence entry cap for FlowPaths.device_arrays: beyond
 # 4 * nnz the padded gather matrix wastes memory on incidence skew, but up
@@ -608,6 +610,22 @@ def _cvaliant_select_block(nh_cols: np.ndarray, nb: np.ndarray,
     return np.take_along_axis(nb_s, order, axis=1), cnt
 
 
+def _per_flow_bytes(mode: str, k_candidates: int = 8,
+                    diameter: int = 2) -> int:
+    """Bytes one flow contributes to a blocked path build: the [F, K, L]
+    int32 edges + hops/valid/is_min (+ first_edge/min scratch), plus
+    Valiant/CValiant segment scratch and intermediate bookkeeping.  Shared
+    by the peak estimator and the flow-chunk sizing of
+    `build_flow_paths_chunks`."""
+    _, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
+    lmax = 2 * max(2, diameter)
+    per_flow = k_total * (4 * lmax + 6) + 12 + 4 * max(diameter, 1)
+    if alt_kind in ("valiant", "cvaliant"):
+        # e1/e2 segment scratch + intermediate bookkeeping per candidate
+        per_flow += k_alt * (8 * max(diameter, 1) + 16)
+    return per_flow
+
+
 def blocked_paths_peak_bytes(n: int, e_dir: int, deg_max: int,
                              num_flows: int, mode: str = "min",
                              k_candidates: int = 8, diameter: int = 2,
@@ -618,26 +636,25 @@ def blocked_paths_peak_bytes(n: int, e_dir: int, deg_max: int,
     term scales as [n, n] -- flow memory is proportional to the flow batch
     and block memory to the `_ECMP_BLOCK_MAX_ENTRIES` budget, which is what
     lets the scale tier route inside the 2 GiB test envelope
-    (tests/test_blocked_paths.py)."""
-    _, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
-    lmax = 2 * max(2, diameter)
+    (tests/test_blocked_paths.py).  Composed from the shared accounting
+    helper in `repro.parallel.blockwise` (`peak_bytes`), like the routing
+    estimators it rides on."""
     dmax = max(deg_max, 1)
     if block is None:
         block = _dest_block(n, dmax)
-    # [F, K, L] int32 edges + hops/valid/is_min (+ first_edge/min scratch)
-    per_flow = k_total * (4 * lmax + 6) + 12 + 4 * max(diameter, 1)
-    if alt_kind in ("valiant", "cvaliant"):
-        # e1/e2 segment scratch + intermediate bookkeeping per candidate
-        per_flow += k_alt * (8 * max(diameter, 1) + 16)
     # succ/cnt/order tables (ecmp) or the column-derivation gather -- both
     # bounded by the same block * n * deg_max entry budget
     table = 15 * block * n * dmax if mode == "ecmp" else 0
-    return (num_flows * per_flow + table
-            + dest_block_peak_bytes(n, e_dir, deg_max, block))
+    return peak_bytes(
+        num_flows, _per_flow_bytes(mode, k_candidates, diameter),
+        resident_bytes=table + dest_block_peak_bytes(n, e_dir, deg_max,
+                                                     block))
 
 
 def _build_blocked(rt, pattern: TrafficPattern, mode: str,
-                   k_candidates: int, seed: int) -> FlowPaths:
+                   k_candidates: int, seed: int,
+                   draws: Optional[Dict[str, np.ndarray]] = None
+                   ) -> FlowPaths:
     """Destination-blocked candidate construction (`engine="blocked"`).
 
     `rt` is anything with the `dest_blocks` protocol (`RoutingTables` slices
@@ -650,9 +667,10 @@ def _build_blocked(rt, pattern: TrafficPattern, mode: str,
     them from a second sweep of column blocks -- only destinations that
     actually appear in the flow batch (or its intermediate draws) are ever
     BFSed.  Randomness is pre-drawn identically to the other engines, so
-    outputs are bit-identical for equal arguments.
+    outputs are bit-identical for equal arguments; `build_flow_paths_chunks`
+    passes row slices of a full-batch draw via `draws`, which is what makes
+    chunked assembly bit-identical to the monolithic build.
     """
-    rng = np.random.default_rng(seed)
     g = rt.graph
     de = build_directed_edges(g)
     n = g.n
@@ -665,9 +683,10 @@ def _build_blocked(rt, pattern: TrafficPattern, mode: str,
     lmax = 2 * max(2, diam)
     nb, deg = de.padded_neighbors()
     dmax = int(deg.max()) if len(deg) else 0
-    draws = _draw_randomness(rng, alt_kind, f,
-                             k_total if mode == "ecmp" else k_alt,
-                             n, dmax, diam)
+    if draws is None:
+        draws = _draw_randomness(np.random.default_rng(seed), alt_kind, f,
+                                 k_total if mode == "ecmp" else k_alt,
+                                 n, dmax, diam)
 
     edges = -np.ones((f, k_total, lmax), dtype=np.int32)
     hops = np.zeros((f, k_total), dtype=np.int32)
@@ -907,3 +926,51 @@ def build_flow_paths(rt, pattern: TrafficPattern, mode: str,
     if engine == "reference":
         return build_flow_paths_reference(rt, pattern, mode, k_candidates, seed)
     raise ValueError(f"unknown engine {engine!r}")
+
+
+def build_flow_paths_chunks(rt, pattern: TrafficPattern, mode: str,
+                            k_candidates: int = 8, seed: int = 0,
+                            chunk: Optional[int] = None,
+                            budget_bytes: Optional[int] = None
+                            ) -> Iterator[FlowPaths]:
+    """Stream blocked-engine `FlowPaths` chunks over flow batches.
+
+    The chunk axis runs through the shared blockwise executor
+    (`repro.parallel.blockwise.run_blocks`, host backend -- the per-chunk
+    body is itself the destination-blocked engine, so the chunk loop is
+    pure orchestration), sized from `budget_bytes` via the same per-flow
+    accounting as `blocked_paths_peak_bytes` unless an explicit `chunk`
+    is given.  Randomness is drawn once for the full flow batch and
+    row-sliced per chunk, so ``FlowPaths.concat(list(...))`` is
+    bit-identical to the monolithic
+    ``build_flow_paths(..., engine="blocked")`` -- and the chunk stream
+    can be handed straight to the fluid entry points, which normalize
+    through `FlowPaths.concat`.
+    """
+    f = pattern.num_flows
+    g = rt.graph
+    de = build_directed_edges(g)
+    _, alt_kind, k_alt, k_total = _mode_layout(mode, k_candidates)
+    _, deg = de.padded_neighbors()
+    dmax = int(deg.max()) if len(deg) else 0
+    diam = rt.diameter
+    draws = _draw_randomness(np.random.default_rng(seed), alt_kind, f,
+                             k_total if mode == "ecmp" else k_alt,
+                             g.n, dmax, diam)
+    if chunk is None:
+        chunk = block_size_for_budget(
+            f, _per_flow_bytes(mode, k_candidates, diam),
+            DEFAULT_BUDGET_BYTES if budget_bytes is None else budget_bytes)
+    plan = plan_blocks(f, block=chunk)
+
+    def _chunk_fn(idx: np.ndarray) -> FlowPaths:
+        lo, hi = int(idx[0]), int(idx[-1]) + 1
+        sub = TrafficPattern(pattern.name, pattern.src[lo:hi],
+                             pattern.dst[lo:hi], pattern.demand[lo:hi],
+                             pattern.endpoints_per_router)
+        return _build_blocked(rt, sub, mode, k_candidates, seed,
+                              draws={k: v[lo:hi] for k, v in draws.items()})
+
+    for _, (fp,) in run_blocks(np.arange(f, dtype=np.int64), plan, _chunk_fn,
+                               backend="host"):
+        yield fp

@@ -13,7 +13,8 @@ if REPO_ROOT not in sys.path:  # `benchmarks` is a namespace pkg at the root
     sys.path.insert(0, REPO_ROOT)
 
 from benchmarks import common  # noqa: E402
-from benchmarks.run import _saturations, write_report  # noqa: E402
+from benchmarks.run import (_saturations, diff_against_baseline,  # noqa: E402
+                            write_report)
 
 
 class FakeAsyncResult:
@@ -98,3 +99,44 @@ def test_write_report_schema(tmp_path, monkeypatch):
     assert doc["total_wall_s"] == pytest.approx(1.75)
     assert doc["figures"]["bench_fig8_saturation"]["wall_s"] == 1.5
     assert doc["saturations"] == {"fig8.PF.uniform.ugal": 0.95}
+
+
+def _baseline(tmp_path, walls: dict) -> str:
+    doc = {"tier": "SMOKE",
+           "figures": {k: {"wall_s": v, "rows": []} for k, v in walls.items()}}
+    path = tmp_path / "BENCH_SMOKE.json"
+    path.write_text(json.dumps(doc))
+    return str(tmp_path)
+
+
+def test_baseline_diff_warns_past_25_percent(tmp_path):
+    base_dir = _baseline(tmp_path, {"bench_a": 1.0, "bench_b": 2.0})
+    figures = {"bench_a": {"wall_s": 1.24, "rows": []},   # within budget
+               "bench_b": {"wall_s": 2.6, "rows": []},    # 1.30x -> warn
+               "bench_new": {"wall_s": 9.0, "rows": []}}  # no baseline entry
+    warns = diff_against_baseline(figures, "SMOKE", baseline_dir=base_dir)
+    assert len(warns) == 1
+    assert "bench_b" in warns[0] and warns[0].startswith("# WARN")
+    assert "1.30x" in warns[0]
+
+
+def test_baseline_diff_silent_without_baseline_file(tmp_path):
+    figures = {"bench_a": {"wall_s": 99.0, "rows": []}}
+    assert diff_against_baseline(figures, "SMOKE",
+                                 baseline_dir=str(tmp_path)) == []
+    # wrong tier's baseline must not apply either
+    base_dir = _baseline(tmp_path, {"bench_a": 1.0})
+    assert diff_against_baseline(figures, "LARGE",
+                                 baseline_dir=base_dir) == []
+
+
+def test_committed_smoke_baseline_matches_report_schema():
+    """The committed SMOKE baseline stays loadable and carries per-figure
+    wall times for the figures the CI smoke job runs."""
+    path = os.path.join(REPO_ROOT, "benchmarks", "baselines",
+                        "BENCH_SMOKE.json")
+    doc = json.loads(open(path).read())
+    assert doc["tier"] == "SMOKE"
+    assert doc["figures"], "baseline must carry at least one figure"
+    for fig in doc["figures"].values():
+        assert fig["wall_s"] > 0

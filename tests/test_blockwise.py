@@ -1,0 +1,300 @@
+"""Shared blockwise execution core: plan math, host/sharded backend
+bit-identity, and the ported engines riding on it.
+
+The in-process tests run on the single real CPU device (a 1-device mesh
+must degenerate to the reference host loop's results); the slow-marked
+subprocess test re-runs the routing/paths/metrics identity sweep under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the sharded
+backend actually places blocks on 8 devices -- including a non-divisible
+block count exercising both padding paths (short tail block, short tail
+round).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import topologies as tp
+from repro.core.metrics import diameter_and_aspl
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import (all_pairs_distances, build_blocked_routing,
+                                build_routing, destination_blocks,
+                                next_hop_table, sparse_routing_tables)
+from repro.parallel.blockwise import (BlockPlan, available_devices,
+                                      block_size_for_budget, peak_bytes,
+                                      plan_blocks, run_blocks)
+from repro.simulation import build_flow_paths, make_pattern
+from repro.simulation.paths import FlowPaths, build_flow_paths_chunks
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TOPOS = {
+    "pf13": lambda: build_polarfly(13).graph,
+    "sf11": lambda: tp.build_slimfly(11),
+    "ps5x5": lambda: tp.build_polarstar(5, 5),
+}
+
+
+def _graph(name, which):
+    g = TOPOS[name]()
+    if which == "damaged":
+        g = g.subgraph_without_edges(g.edge_list[::5][:8])
+    return g
+
+
+# ---------------------------------------------------------------------------
+# plan math
+# ---------------------------------------------------------------------------
+
+def test_block_plan_bounds_cover_total_exactly():
+    for total, block in [(0, 3), (1, 1), (10, 3), (10, 10), (10, 100),
+                         (157 * 157 + 158, 997)]:
+        plan = BlockPlan(total=total, block=block)
+        spans = [plan.bounds(i) for i in range(plan.num_blocks)]
+        assert all(lo < hi for lo, hi in spans)
+        assert [lo for lo, _ in spans] == [i * block
+                                           for i in range(plan.num_blocks)]
+        covered = sum(hi - lo for lo, hi in spans)
+        assert covered == total
+        assert plan.num_blocks == -(-total // block)
+
+
+def test_block_plan_rounds_ceil_over_devices():
+    plan = BlockPlan(total=100, block=10, devices=4)
+    assert plan.num_blocks == 10 and plan.num_rounds == 3
+    assert BlockPlan(total=100, block=10).num_rounds == 10
+    assert BlockPlan(total=0, block=5, devices=8).num_rounds == 0
+
+
+def test_block_plan_validation():
+    for bad in [dict(total=-1, block=1), dict(total=5, block=0),
+                dict(total=5, block=2, devices=0)]:
+        with pytest.raises(ValueError):
+            BlockPlan(**bad)
+    with pytest.raises(ValueError):
+        plan_blocks(10)  # neither per_item_bytes nor block
+
+
+def test_budget_sizing_and_peak_accounting():
+    assert block_size_for_budget(1000, 100, 100 * 7) == 7
+    assert block_size_for_budget(5, 100, 10 ** 9) == 5  # capped at total
+    assert block_size_for_budget(1000, 100, 1) == 1  # floor of one item
+    assert block_size_for_budget(0, 100, 10 ** 9) == 1
+    assert peak_bytes(7, 100) == 700
+    assert peak_bytes(7, 100, resident_bytes=42) == 742
+    assert plan_blocks(1000, per_item_bytes=100, budget_bytes=700).block == 7
+    assert plan_blocks(1000, block=13).block == 13  # explicit block wins
+
+
+# ---------------------------------------------------------------------------
+# run_blocks: backends, validation, padding
+# ---------------------------------------------------------------------------
+
+def test_run_blocks_host_streams_blocks_in_order():
+    items = np.arange(10, dtype=np.int64)
+    plan = plan_blocks(10, block=3)
+    got = list(run_blocks(items, plan, lambda b: (b * 2, b + 1)))
+    assert len(got) == 4
+    np.testing.assert_array_equal(np.concatenate([b for b, _ in got]), items)
+    for blk, (dbl, inc) in got:
+        np.testing.assert_array_equal(dbl, blk * 2)
+        np.testing.assert_array_equal(inc, blk + 1)
+
+
+def test_run_blocks_single_output_normalized_to_tuple():
+    got = list(run_blocks(np.arange(4), plan_blocks(4, block=2),
+                          lambda b: b * 3))
+    assert all(isinstance(o, tuple) and len(o) == 1 for _, o in got)
+
+
+def test_run_blocks_validation():
+    items = np.arange(6)
+    with pytest.raises(ValueError):
+        list(run_blocks(items, plan_blocks(5, block=2), lambda b: b))
+    with pytest.raises(ValueError):
+        list(run_blocks(items, plan_blocks(6, block=2), lambda b: b,
+                        backend="nope"))
+    with pytest.raises(ValueError):  # sharded demands a device twin
+        list(run_blocks(items, plan_blocks(6, block=2), lambda b: b,
+                        backend="sharded"))
+    assert list(run_blocks(np.arange(0), plan_blocks(0, block=2),
+                           lambda b: b)) == []
+
+
+def test_run_blocks_sharded_matches_host_on_synthetic_fn():
+    """Explicit sharded backend on however many devices exist (1 in the
+    plain test run): padding paths (short tail block, tail round) must
+    still reproduce the host loop bit for bit."""
+    jnp = pytest.importorskip("jax.numpy")
+    items = np.arange(23, dtype=np.int64)  # 5 blocks of 5 -> short tail
+
+    def host_fn(blk):
+        return blk * blk + 1, (blk % 3).astype(np.int32)
+
+    def device_fn(blk):
+        return blk * blk + 1, (blk % 3).astype(jnp.int32)
+
+    for ndev in (1, available_devices()):
+        plan = plan_blocks(len(items), block=5, devices=ndev)
+        ref = list(run_blocks(items, plan, host_fn, backend="host"))
+        got = list(run_blocks(items, plan, host_fn, device_fn,
+                              backend="sharded"))
+        assert len(got) == len(ref)
+        for (rb, ro), (gb, go) in zip(ref, got):
+            np.testing.assert_array_equal(rb, gb)
+            for r, g in zip(ro, go):
+                np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_run_blocks_auto_stays_on_host_without_mesh():
+    """auto never shards on a single-device plan, even with a device_fn."""
+    calls = []
+
+    def device_fn(blk):
+        calls.append(1)
+        return blk
+
+    plan = plan_blocks(10, block=3, devices=1)
+    list(run_blocks(np.arange(10), plan, lambda b: b, device_fn,
+                    backend="auto"))
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# ported engines: sharded backend == host loop on the real topologies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(TOPOS))
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_sharded_routing_tables_bit_identical(name, which):
+    g = _graph(name, which)
+    dist = all_pairs_distances(g, engine="dense")
+    nh = next_hop_table(g, dist, engine="dense")
+    # block=17 never divides these orders evenly -> tail padding in play
+    sd, sn = sparse_routing_tables(g, block=17, backend="sharded")
+    np.testing.assert_array_equal(sd, dist)
+    np.testing.assert_array_equal(sn, nh)
+
+
+@pytest.mark.parametrize("name", sorted(TOPOS))
+@pytest.mark.parametrize("which", ["intact", "damaged"])
+def test_sharded_destination_blocks_bit_identical(name, which):
+    g = _graph(name, which)
+    dist = all_pairs_distances(g, engine="dense")
+    nh = next_hop_table(g, dist, engine="dense")
+    got_d = np.empty_like(dist)
+    got_n = np.empty_like(nh)
+    for dblk, dc, nc in destination_blocks(g, block=17, backend="sharded"):
+        got_d[:, dblk] = dc
+        got_n[:, dblk] = nc
+    np.testing.assert_array_equal(got_d, dist)
+    np.testing.assert_array_equal(got_n, nh)
+
+
+def test_sharded_metrics_streaming_bit_identical():
+    for which in ("intact", "damaged"):
+        g = _graph("pf13", which)
+        ref = diameter_and_aspl(g, engine="dense")
+        got = diameter_and_aspl(g, engine="sparse", backend="sharded")
+        assert got[0] == ref[0]
+        assert got[1] == pytest.approx(ref[1], rel=0, abs=0)  # exact sums
+
+
+def test_sharded_blocked_routing_paths_bit_identical():
+    g = _graph("pf13", "damaged")
+    rt = build_routing(g)
+    brt = build_blocked_routing(g, block=17, backend="sharded")
+    pat = make_pattern("uniform", rt, p=4, seed=3, max_flows=2000)
+    for mode in ("min", "ecmp", "ugal_pf"):
+        ref = build_flow_paths(rt, pat, mode, k_candidates=5, seed=7,
+                               engine="blocked")
+        got = build_flow_paths(brt, pat, mode, k_candidates=5, seed=7,
+                               engine="blocked")
+        for f in ("edges", "hops", "valid", "is_min", "first_edge"):
+            np.testing.assert_array_equal(getattr(ref, f), getattr(got, f))
+
+
+def test_chunked_flow_paths_concat_bit_identical():
+    g = TOPOS["sf11"]()
+    rt = build_routing(g)
+    pat = make_pattern("uniform", rt, p=4, seed=3, max_flows=3000)
+    for mode in ("min", "valiant", "ugal"):
+        whole = build_flow_paths(rt, pat, mode, k_candidates=5, seed=7,
+                                 engine="blocked")
+        chunks = list(build_flow_paths_chunks(rt, pat, mode, k_candidates=5,
+                                              seed=7, chunk=257))
+        assert len(chunks) > 1
+        cat = FlowPaths.concat(chunks)
+        for f in ("edges", "hops", "valid", "is_min", "first_edge"):
+            np.testing.assert_array_equal(getattr(whole, f), getattr(cat, f))
+
+
+# ---------------------------------------------------------------------------
+# 8 forced host devices (subprocess: jax locks device count at first init)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+assert len(jax.devices()) == 8
+
+from repro.core.metrics import diameter_and_aspl
+from repro.core.polarfly import build_polarfly
+from repro.core import topologies as tp
+from repro.core.routing import (all_pairs_distances, build_blocked_routing,
+                                build_routing, destination_blocks,
+                                next_hop_table, sparse_routing_tables)
+from repro.simulation import build_flow_paths, make_pattern
+
+for build in (lambda: build_polarfly(13).graph,
+              lambda: tp.build_slimfly(11),
+              lambda: tp.build_polarstar(5, 5)):
+    for which in ("intact", "damaged"):
+        g = build()
+        if which == "damaged":
+            g = g.subgraph_without_edges(g.edge_list[::5][:8])
+        dist = all_pairs_distances(g, engine="dense")
+        nh = next_hop_table(g, dist, engine="dense")
+        # block=17 divides none of these orders: n=183/98/150 -> 11/6/9
+        # blocks over 8 devices = short tail block AND short tail round
+        sd, sn = sparse_routing_tables(g, block=17, backend="sharded")
+        assert np.array_equal(sd, dist) and np.array_equal(sn, nh), which
+        got_d, got_n = np.empty_like(dist), np.empty_like(nh)
+        for dblk, dc, nc in destination_blocks(g, block=17,
+                                               backend="sharded"):
+            got_d[:, dblk] = dc
+            got_n[:, dblk] = nc
+        assert np.array_equal(got_d, dist) and np.array_equal(got_n, nh)
+
+g = build_polarfly(13).graph.subgraph_without_edges(
+    build_polarfly(13).graph.edge_list[::5][:8])
+ref = diameter_and_aspl(g, engine="dense")
+got = diameter_and_aspl(g, engine="sparse", backend="sharded")
+assert got == ref, (got, ref)
+
+rt = build_routing(g)
+brt = build_blocked_routing(g, block=17, backend="sharded")
+pat = make_pattern("uniform", rt, p=4, seed=3, max_flows=2000)
+for mode in ("min", "ecmp", "ugal_pf"):
+    a = build_flow_paths(rt, pat, mode, k_candidates=5, seed=7,
+                         engine="blocked")
+    b = build_flow_paths(brt, pat, mode, k_candidates=5, seed=7,
+                         engine="blocked")
+    for f in ("edges", "hops", "valid", "is_min", "first_edge"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), (mode, f)
+print("BLOCKWISE_8DEV_OK")
+'''
+
+
+@pytest.mark.slow
+def test_sharded_backend_on_8_forced_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "BLOCKWISE_8DEV_OK" in r.stdout
