@@ -3,7 +3,7 @@ the 90%-of-saturation latency point comes from the vmapped latency curve)."""
 from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_routing
 from repro.simulation import (build_flow_paths, latency_curve, make_pattern,
-                              saturation_throughput)
+                              saturation_throughput, truncation_error)
 
 from .common import emit, fw_iters, smoke, timed
 
@@ -25,8 +25,11 @@ def run():
             lat = latency_curve(fp, [0.9 * max(sat, 0.02)],
                                 iters=fw_iters(mode),
                                 engine="batched")[0].mean_latency
-            emit(f"fig9.{pattern}.{mode}", us,
-                 f"sat={sat:.3f};lat90={lat:.1f}cyc")
+            info = f"sat={sat:.3f};lat90={lat:.1f}cyc"
+            if mode in ("ugal", "ugal_pf"):
+                trunc = truncation_error(fp, sat, fw_iters(mode))
+                info += f";trunc={trunc:.4f}"
+            emit(f"fig9.{pattern}.{mode}", us, info)
 
 
 if __name__ == "__main__":

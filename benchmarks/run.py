@@ -48,16 +48,61 @@ BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 REGRESSION_RATIO = 1.25
 
 
-def _saturations(rows) -> dict:
-    """{row name: float} for every row whose derived value is `sat=<x>`."""
+def _kv(derived: str) -> dict:
+    """Parse a `k=v;k=v` derived string (rows may carry several fields)."""
     out = {}
-    for row in rows:
-        derived = row["derived"]
-        if derived.startswith("sat="):
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _floats(kv: dict, keys) -> dict:
+    out = {}
+    for k in keys:
+        if k in kv:
             try:
-                out[row["name"]] = float(derived[len("sat="):])
+                out[k] = float(kv[k].rstrip("x"))
             except ValueError:
                 pass
+    return out
+
+
+def _saturations(rows) -> dict:
+    """{row name: float} for every row carrying a `sat=<x>` field."""
+    out = {}
+    for row in rows:
+        got = _floats(_kv(row["derived"]), ("sat",))
+        if "sat" in got:
+            out[row["name"]] = got["sat"]
+    return out
+
+
+def _certifications(rows) -> dict:
+    """Certified-solver rows (those carrying a `gap=` field): the duality
+    gap, certified saturation bracket, iteration count, and accuracy vs
+    the reference engine, parsed out of the derived string so certified
+    tolerances can be diffed across commits like the saturations."""
+    out = {}
+    for row in rows:
+        kv = _kv(row["derived"])
+        if "gap" in kv:
+            out[row["name"]] = _floats(
+                kv, ("sat", "gap", "lo", "hi", "iters", "err_vs_ref",
+                     "speedup"))
+    return out
+
+
+def _truncations(rows) -> dict:
+    """{row name: float} for rows carrying a `trunc=<x>` field (the
+    adaptive-mode Frank-Wolfe truncation-error estimate at the reported
+    saturation)."""
+    out = {}
+    for row in rows:
+        got = _floats(_kv(row["derived"]), ("trunc",))
+        if "trunc" in got:
+            out[row["name"]] = got["trunc"]
     return out
 
 
@@ -91,6 +136,8 @@ def write_report(figures: dict, path: str) -> None:
         "total_wall_s": round(sum(f["wall_s"] for f in figures.values()), 3),
         "figures": figures,
         "saturations": _saturations(rows),
+        "certifications": _certifications(rows),
+        "truncation_err": _truncations(rows),
     }
     with open(path, "w", encoding="utf-8") as fh:
         json.dump(report, fh, indent=2, sort_keys=True)

@@ -37,9 +37,12 @@ DEFAULT_SCOPE: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
     # the modules PR 3/4 scrubbed of [n, n] materialization, plus the
     # blockwise executor all their streaming loops now run through
     "dense-square": (_SIM_PATH_MODULES, ()),
-    # anything the fluid solver or graph core executes per-iteration
+    # anything the fluid solver or graph core executes per-iteration --
+    # including the minplus kernel pair, which PR 8 put on the certified
+    # solver's per-iteration cost reduction
     "scatter-add": (("src/repro/simulation/*.py", "src/repro/core/*.py",
-                     "src/repro/parallel/blockwise.py"),
+                     "src/repro/parallel/blockwise.py",
+                     "src/repro/kernels/minplus/*.py"),
                     ()),
     # jit bodies can appear anywhere (kernels, solver, launch)
     "host-sync": (("*",), ()),

@@ -6,11 +6,17 @@ force a device->host transfer per call when the function falls back to
 eager execution.  The solver keeps whole sweeps inside one jit (PR 2)
 precisely to avoid such syncs.
 
-Detection is decorator-driven (a deliberate, documented approximation of
-"@jax.jit-reachable"): a function counts as jitted when decorated with
-``@jax.jit`` or ``@functools.partial(jax.jit, ...)``, and the rule scans
-its whole body including nested defs.  ``float()``/``int()`` are only
-flagged when their argument mentions a *traced* parameter (not listed in
+Detection is a deliberate, documented approximation of
+"@jax.jit-reachable": a function counts as jitted when decorated with
+``@jax.jit`` or ``@functools.partial(jax.jit, ...)``, **or** when it is
+jitted by assignment -- ``g = jax.jit(f)``, including through wrappers
+whose first positional argument is the function, as in the blockwise
+executor's ``mapped = jax.jit(shard_map(per_device, ...))`` -- and the
+rule scans its whole body including nested defs (so the certified fluid
+entry points -- ``_certified_solve`` / ``_certified_saturation`` and the
+closures they trace -- are in scope: a ``float(gap)`` there is a per-call
+device round-trip).  ``float()``/``int()`` are only flagged
+when their argument mentions a *traced* parameter (not listed in
 ``static_argnames``) outside shape-like attribute accesses
 (``x.shape`` / ``x.ndim`` / ``x.size`` / ``x.dtype`` and ``len(...)`` are
 static under tracing and stay legal).
@@ -65,6 +71,23 @@ def _param_names(fn: ast.AST) -> Set[str]:
             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)}
 
 
+def _jit_call_target(call: ast.Call, ctx: FileContext
+                     ) -> Optional[Tuple[str, Set[str]]]:
+    """(target function name, static_argnames) when `call` is the
+    jit-by-assignment form ``jax.jit(f, ...)`` -- unwrapping wrapper calls
+    whose first positional argument carries the function, so
+    ``jax.jit(shard_map(per_device, mesh=...))`` resolves to
+    ``per_device``."""
+    if ctx.dotted(call.func) not in ("jax.jit", "jit") or not call.args:
+        return None
+    inner = call.args[0]
+    while isinstance(inner, ast.Call) and inner.args:
+        inner = inner.args[0]
+    if isinstance(inner, ast.Name):
+        return inner.id, _static_names(call)
+    return None
+
+
 def _mentions_traced(node: ast.AST, traced: Set[str]) -> bool:
     """True when the expression reads a traced name outside shape-like
     contexts.  Subtrees under ``.shape``-style attributes or ``len()``
@@ -88,11 +111,26 @@ class HostSyncRule(Rule):
 
     def check(self, ctx: FileContext) -> List[Finding]:
         out: List[Finding] = []
-        for fn in ctx.function_defs():
-            jit = _jit_decoration(fn, ctx)
-            if jit is None:
+        fns = list(ctx.function_defs())
+        # jitted by decorator...
+        jitted = {}  # id(fn node) -> (fn, static names)
+        by_name: dict = {}
+        for fn in fns:
+            by_name.setdefault(fn.name, fn)
+            dec = _jit_decoration(fn, ctx)
+            if dec is not None:
+                jitted[id(fn)] = (fn, dec[1])
+        # ...or by assignment anywhere in the file (g = jax.jit(f))
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
                 continue
-            traced = _param_names(fn) - jit[1]
+            tgt = _jit_call_target(node, ctx)
+            if tgt is not None and tgt[0] in by_name:
+                fn = by_name[tgt[0]]
+                prev = jitted.get(id(fn))
+                jitted[id(fn)] = (fn, tgt[1] | (prev[1] if prev else set()))
+        for fn, statics in jitted.values():
+            traced = _param_names(fn) - statics
             for node in ast.walk(fn):
                 if not isinstance(node, ast.Call):
                     continue

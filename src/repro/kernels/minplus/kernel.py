@@ -33,6 +33,49 @@ def _minplus_kernel(a_ref, b_ref, o_ref):
     o_ref[...] = jnp.minimum(o_ref[...], cand)
 
 
+def _path_cost_kernel(delay_ref, eidx_ref, o_ref):
+    """Grid (i,) over flow tiles.  o[f, k] = sum_l delay[eidx[f, k, l]].
+
+    The delay table rides whole in VMEM (one row of ``[1, Ep]``; even the
+    PF(79) scale tier is ~500k links = 2 MB fp32 << 16 MiB), while the
+    ``[bf, K, L]`` edge-id tile streams per grid step -- the same
+    stay-resident / stream split as the tropical matmul above, with the
+    gather standing in for the A-row stream."""
+    d = delay_ref[0, :]          # [Ep]
+    idx = eidx_ref[...]          # [bf, K, L]
+    o_ref[...] = jnp.take(d, idx, axis=0).sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def path_costs_pallas(delay: jnp.ndarray, eidx: jnp.ndarray, bf: int = 256,
+                      interpret: bool = True):
+    """Tiled per-candidate path-cost reduction; see `ref.path_costs_ref`.
+
+    ``delay``: [E + 1] padded per-link delay table (pad slot must be 0).
+    ``eidx``: [F, K, L] int32 edge ids with pads remapped to E.
+    Returns [F, K] costs in ``delay.dtype``.
+    """
+    f, k, l = eidx.shape
+    ep = delay.shape[0]
+    fp_ = -(-max(f, 1) // bf) * bf
+    # pad rows gather only the zero pad slot, so their cost is 0 and the
+    # trailing rows are simply dropped below
+    eidx = jnp.pad(eidx, ((0, fp_ - f), (0, 0), (0, 0)),
+                   constant_values=ep - 1)
+    out = pl.pallas_call(
+        _path_cost_kernel,
+        grid=(fp_ // bf,),
+        in_specs=[
+            pl.BlockSpec((1, ep), lambda i: (0, 0)),
+            pl.BlockSpec((bf, k, l), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bf, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((fp_, k), delay.dtype),
+        interpret=interpret,
+    )(delay[None, :], eidx)
+    return out[:f]
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def minplus_pallas(a: jnp.ndarray, b: jnp.ndarray, bm: int = 128,
                    bn: int = 128, bk: int = 128, interpret: bool = True):

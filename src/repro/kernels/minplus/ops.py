@@ -8,12 +8,32 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import minplus_pallas
-from .ref import adjacency_to_dist0, minplus_ref, INF
+from .kernel import minplus_pallas, path_costs_pallas
+from .ref import adjacency_to_dist0, minplus_ref, path_costs_ref, INF
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def path_costs(delay: jnp.ndarray, eidx: jnp.ndarray,
+               use_pallas: bool = None, block: int = 256) -> jnp.ndarray:
+    """[F, K] per-candidate path costs: ``sum_l delay[eidx[f, k, l]]``.
+
+    The fluid solver's per-iteration best-response reduction (tropical:
+    sum over links here, min over candidates in the caller).  Backend
+    choice follows the repo's two-engine discipline: ``use_pallas=None``
+    (the default) picks the tiled Pallas kernel on TPU and the
+    bit-identical jnp reference everywhere else -- interpret-mode Pallas
+    is Python-speed on CPU, and this runs inside every Frank-Wolfe step.
+    Traceable under jit/vmap either way (the backend choice is static).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return path_costs_pallas(delay, eidx, bf=block,
+                                 interpret=not _on_tpu())
+    return path_costs_ref(delay, eidx)
 
 
 def minplus(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = True,

@@ -12,6 +12,20 @@ def minplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.min(a[:, None, :] + b.T[None, :, :], axis=-1)
 
 
+def path_costs_ref(delay: jnp.ndarray, eidx: jnp.ndarray) -> jnp.ndarray:
+    """Per-candidate path costs from a padded per-link delay table.
+
+    ``delay`` is ``[E + 1]`` (last slot is the zero pad that -1-padded edge
+    ids were remapped to); ``eidx`` is ``[F, K, L]`` int32.  Returns
+    ``cost[f, k] = sum_l delay[eidx[f, k, l]]`` -- the (+)-half of the
+    tropical best-response reduction the fluid solver runs per
+    Frank-Wolfe iteration (the min-over-K half stays in the caller, which
+    also needs the full ``[F, K]`` cost for the duality gap).  This jnp
+    form is the bit-identical CPU twin of ``path_costs_pallas``.
+    """
+    return delay[eidx].sum(axis=-1)
+
+
 def adjacency_to_dist0(adj: jnp.ndarray) -> jnp.ndarray:
     """Boolean adjacency -> 1-step distance matrix (0 diag, 1 edge, INF else)."""
     n = adj.shape[0]

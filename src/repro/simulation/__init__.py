@@ -4,5 +4,6 @@ from .traffic import TrafficPattern, make_pattern, PATTERNS  # noqa: F401
 from .paths import (FlowPaths, build_flow_paths,  # noqa: F401
                     build_flow_paths_chunks, build_flow_paths_reference,
                     build_directed_edges, blocked_paths_peak_bytes)
-from .fluid import (FluidResult, SaturationResult, evaluate_load,  # noqa: F401
-                    saturation_throughput, truncation_error, latency_curve)
+from .fluid import (FluidResult, SaturationResult, Certificate,  # noqa: F401
+                    CertifiedResult, evaluate_load, saturation_throughput,
+                    truncation_error, latency_curve)

@@ -52,23 +52,61 @@ iteration budget (e.g. PF(13) random-perm UGAL_PF saturation moves 0.41 ->
 truncation trajectory than cold-started ones, so the engines agree only as
 tightly as the solves are converged: within `tol` = 0.05 at iters >= 3000
 on PF(13) adversarial patterns, and asymptotically as iters grows.
+
+Certified engine (``certify=True`` on the public entry points): instead of
+trusting a fixed iteration budget, the solver computes the Frank-Wolfe
+duality gap
+
+  g(split) = sum_f demand_f * <split_f - target_f, cost_f>  >=  Phi - Phi*
+
+and drives everything off it.  The steps are conjugate Frank-Wolfe with an
+exact line search on the Beckmann potential (Mitradjieva-Lindberg CFW:
+vanilla FW's O(1/t) zigzag is far too slow to certify anything; UGAL_PF
+keeps the uncertified engines' harmonic steps, since its gated target is
+not an oracle and line search on the potential is meaningless).  The gap
+is turned into a *certified max-utilization bracket* [util_lb, util_ub]
+by per-link Bregman localization (`_util_interval`): Phi is separable
+across links and the equilibrium loads are optimal over the feasible load
+polytope, so Phi(rho) - Phi* >= D_e(rho_e, rho*_e) per link, and each
+rho*_e lies where the per-link divergence stays <= g.  The near-saturated
+links that decide feasibility sit in the high-curvature region of the
+M/D/1 delay, so their intervals are orders of magnitude tighter than the
+global 2*sqrt(g) strong-convexity bound -- that is what makes the
+certificate reachable at practical budgets.  A bisection probe is
+*certified feasible* when util_ub <= 1 and *certified infeasible* when
+util_lb > 1, and `_certified_saturation` uses those decisions to
+early-exit each in-jit warm-started probe (lax.while_loop over strided
+step chunks) instead of running a fixed budget.  The per-iteration
+best-response cost reduction is routed through
+`kernels.minplus.path_costs` -- the tiled Pallas kernel on TPU, its
+bit-identical jnp twin on CPU.  Tight brackets need small gaps, and the
+fp32 gap has an inner-product-cancellation noise floor (~1e-3 * total
+demand): set JAX_ENABLE_X64=1 and the certified engine picks float64
+automatically (tighter default util_tol) while the uncertified engines
+stay pinned to float32.  For mode="ugal" the gap is a true duality gap
+(theorem-grade bracket); for mode="ugal_pf" the gated target makes |g| a
+fixed-point residual (`Certificate.kind = "gated-residual"`, empirically
+validated by tests); oblivious splits are exact fixed points (gap
+identically 0).
 """
 
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import List
+from typing import Callable, List, NamedTuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.minplus.ops import path_costs
 from .paths import FlowPaths
 
-__all__ = ["FluidResult", "SaturationResult", "evaluate_load",
-           "saturation_throughput", "truncation_error", "latency_curve"]
+__all__ = ["FluidResult", "SaturationResult", "Certificate",
+           "CertifiedResult", "evaluate_load", "saturation_throughput",
+           "truncation_error", "latency_curve"]
 
 _EPS = 1e-6
 _RHO_CAP = 0.999
@@ -77,6 +115,10 @@ _BUF_PACKETS = 32.0  # 128-flit input buffers, 4-flit packets (paper §VIII-A)
 # warm step moves 2/(t+2) = 1/3 of the way to the current best response,
 # instead of gamma(0) = 1 which would discard the carried split entirely.
 _WARM_T0 = 4.0
+# Certified runs check the duality gap (and the early-exit decision) once
+# per chunk of this many line-searched steps, and refresh the incrementally
+# updated link loads from the split at the same cadence.
+_CERT_STRIDE = 32
 
 
 @dataclass
@@ -106,29 +148,213 @@ class SaturationResult:
     truncation_err: float
 
 
+@dataclass
+class Certificate:
+    """Convergence certificate attached to every `certify=True` result.
+
+    `gap` is the Frank-Wolfe duality gap at the reported iterate, and
+    `[util_lb, util_ub]` the certified bracket it induces on the *exact*
+    Wardrop-equilibrium max link utilization via per-link Bregman
+    localization of the Beckmann potential (`_util_interval`): both the
+    measured max_util and the exact equilibrium's lie inside it, and
+    `util_err_bound = util_ub - util_lb` is the bracket width the
+    `util_tol` stopping rule acts on.  The bracket is theorem-grade when
+    `kind == "duality-gap"` (mode="ugal": the target is the true
+    linear-minimization oracle, so gap >= Phi - Phi*).  For mode="ugal_pf"
+    the 2/3-occupancy gate biases the target away from the oracle, so
+    |gap| is a fixed-point residual (`kind == "gated-residual"`): the same
+    stopping rule and the same bracket formula, empirically validated
+    rather than proven.  Oblivious splits are exact fixed points: gap is
+    identically 0, the bracket has zero width, and `kind == "exact"`.
+
+    `converged` is True when the run exited on the bracket test
+    (util_err_bound <= util_tol) or, for saturation probes, on a certified
+    feasibility decision -- False means the `cert_iters` budget ran out
+    first, and `gap` / the bracket report how far the run actually got
+    (still valid bounds).  `dtype` records the certification precision
+    ("float64" requires JAX_ENABLE_X64=1, see docs/benchmarks.md).
+    """
+    gap: float
+    util_lb: float
+    util_ub: float
+    util_err_bound: float
+    util_tol: float
+    iters: int
+    dtype: str
+    converged: bool
+    kind: str
+
+
+@dataclass
+class CertifiedResult:
+    """A certified value plus its `Certificate`.
+
+    `value` is whatever the uncertified call would have returned
+    (`FluidResult` for `evaluate_load`/`latency_curve`, the saturation
+    float for `saturation_throughput`).  For saturations, `[sat_lo,
+    sat_hi]` is the *certified* bracket: every probe at or below `sat_lo`
+    was certified feasible (util_ub <= 1) and every probe at or above
+    `sat_hi` certified infeasible (util_lb > 1), so the exact saturation
+    load of the equilibrium model lies in the bracket (up to the bisection
+    grid); the point value keeps the uncertified engines' convention
+    (largest probed load with measured max_util <= 1).  NaN bracket fields
+    on non-saturation results.
+    """
+    value: object
+    cert: Certificate
+    sat_lo: float = float("nan")
+    sat_hi: float = float("nan")
+
+
 def _queue_delay(rho: jnp.ndarray) -> jnp.ndarray:
     """M/D/1 waiting time, capped near saturation."""
     r = jnp.clip(rho, 0.0, _RHO_CAP)
     return r / (2.0 * (1.0 - r))
 
 
+def _queue_delay_prime(rho: jnp.ndarray) -> jnp.ndarray:
+    """d/drho of `_queue_delay` below the cap: 1/(2(1-rho)^2) -- the
+    diagonal Beckmann Hessian the conjugate-direction combination uses."""
+    r = jnp.clip(rho, 0.0, _RHO_CAP)
+    return 1.0 / (2.0 * (1.0 - r) ** 2)
+
+
+# w(_RHO_CAP): the slope of the Beckmann integrand in the clipped region
+_W_CAP = _RHO_CAP / (2.0 * (1.0 - _RHO_CAP))
+
+
+def _w_integral(r: jnp.ndarray) -> jnp.ndarray:
+    """W(r) = int_0^r w(s) ds for the capped M/D/1 delay `_queue_delay`:
+    (1/2)(-log(1-r) - r) below the cap, linear with slope w(cap) above."""
+    rc = jnp.clip(r, 0.0, _RHO_CAP)
+    return 0.5 * (-jnp.log1p(-rc) - rc) + _W_CAP * jnp.maximum(r - _RHO_CAP,
+                                                               0.0)
+
+
+def _bregman(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Per-link Bregman divergence of the Beckmann integrand,
+    D(x, y) = W(x) - W(y) - w(y)(x - y) >= 0, zero iff x == y (up to the
+    zero-curvature region above the cap).  The linear '1 +' part of the
+    link cost cancels in the divergence."""
+    return _w_integral(x) - _w_integral(y) - _queue_delay(y) * (x - y)
+
+
+def _util_interval(rho, gap, num_links: int, ymax: float = 4.0):
+    """Certified bracket [mu_lb, mu_ub] for the exact Wardrop equilibrium's
+    max link utilization, given Phi(rho) - Phi* <= gap with `rho` feasible.
+
+    Phi is separable across links and rho* is first-order optimal over the
+    feasible load polytope (rho is a member), so
+
+      Phi(rho) - Phi*  =  grad Phi(rho*) . (rho - rho*) + sum_e D_e
+                       >=  D(rho_e, rho*_e)   for every link e separately,
+
+    i.e. each rho*_e lies in the interval where the per-link Bregman
+    divergence `_bregman(rho_e, .)` stays <= gap.  The divergence is
+    monotone on either side of rho_e, so the interval ends invert by
+    bisection (vectorized over links).  Then max_e lower_e <= mu* <=
+    max_e upper_e.  This localization is what makes the certificate
+    usable: the near-saturated links that decide feasibility sit in the
+    high-curvature region w'(rho) ~ 1/(2(1-rho)^2), where the interval is
+    orders of magnitude tighter than the global strong-convexity bound
+    2*sqrt(gap).  Links whose upper interval end exceeds `ymax` report
+    +inf (the divergence stops growing only above the cap, so by
+    ymax = 4 that means the gap is still huge)."""
+    if not num_links:
+        z = jnp.zeros((), rho.dtype)
+        return z, z
+    g = jnp.maximum(gap, 0.0)
+
+    def shrink(_, lohi):
+        # invariant: D(rho, inner) <= g, outer is on the far side
+        inner, outer = lohi
+        mid = 0.5 * (inner + outer)
+        ok = _bregman(rho, mid) <= g
+        return (jnp.where(ok, mid, inner), jnp.where(ok, outer, mid))
+
+    hi0 = jnp.full_like(rho, ymax)
+    up, _ = jax.lax.fori_loop(0, 60, shrink, (rho, hi0))
+    up = jnp.where(_bregman(rho, hi0) <= g, jnp.inf, up)
+    dn, _ = jax.lax.fori_loop(0, 60, shrink, (rho, jnp.zeros_like(rho)))
+    return jnp.max(dn), jnp.max(up)
+
+
+def _phi_mass_lower_bound(phi_star_lb, traversals, ymax: float = 4.0):
+    """Potential-mass lower bound on the equilibrium max utilization.
+
+    The Bregman localization above is blind on the infeasible side: the
+    capped integrand is linear above `_RHO_CAP`, so no gap can distinguish
+    rho* = 1.001 from rho* = 4 there.  This closes that hole with a mass
+    argument: if mu* <= m, then per-link convexity gives phi(rho*_e) <=
+    rho*_e * phi(m)/m, and the total load is conserved --
+    sum_e rho*_e <= `traversals` (total demand weighted by each flow's
+    longest candidate path) -- so Phi* <= (phi(m)/m) * traversals.  Given
+    `phi_star_lb` <= Phi* (the Frank-Wolfe lower bound Phi(rho) - gap),
+    every m violating that inequality is excluded: the largest excluded m
+    (monotone, found by bisection) is a certified lower bound on mu*.
+    Returns 0 when nothing is excluded; deeply infeasible loads are
+    excluded quickly because their overload mass makes Phi(rho) - gap huge
+    relative to the feasible-potential ceiling."""
+    def excluded(m):
+        m = jnp.maximum(m, 1e-6)
+        return phi_star_lb > (m + _w_integral(m)) / m * traversals
+
+    def half(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        return jnp.where(excluded(mid), mid, lo), jnp.where(excluded(mid),
+                                                            hi, mid)
+
+    z = jnp.zeros_like(phi_star_lb)
+    lo, _ = jax.lax.fori_loop(0, 60, half, (z, jnp.full_like(z, ymax)))
+    return lo
+
+
+class _FWPieces(NamedTuple):
+    """`_fw_pieces` bundle; see its docstring for the field contracts."""
+    init: jnp.ndarray
+    equilibrate: Callable
+    loads: Callable
+    cost_of: Callable
+    fw_target: Callable
+    target_of: Callable
+    gap_of: Callable
+    cert_equilibrate: Callable
+
+
 def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
-               num_links: int, mode: str, barrier: bool = True):
+               num_links: int, mode: str, barrier: bool = True,
+               dtype=jnp.float32) -> _FWPieces:
     """Shared Frank-Wolfe building blocks, traced inside each jitted entry.
 
-    Returns (init_split, equilibrate, loads, cost_of, fw_target):
+    Returns a `_FWPieces` namedtuple:
 
-      init_split        [F, K] mode-dependent starting split.
+      init              [F, K] mode-dependent starting split.
       equilibrate(split0, demand, iters, t0)
                         `iters` Frank-Wolfe steps from `split0` using step
                         sizes 2/(t+2) for t = t0, t0+1, ...; identity for
                         oblivious modes (their split is the fixed point).
       loads(split, demand) -> rho [E]
-      cost_of(rho)      -> per-candidate path cost [F, K]
+      cost_of(rho)      -> per-candidate path cost [F, K], routed through
+                        `kernels.minplus.path_costs` (tiled Pallas kernel
+                        on TPU, bit-identical jnp twin on CPU).
       fw_target(split, rho) -> [F, K] Frank-Wolfe best-response target
                         (adaptive modes only; includes the UGAL_PF gate),
                         shared by `equilibrate` and the truncation-error
                         probe so both apply identical per-step math.
+      target_of(split, rho, cost) -> fw_target with the masked cost
+                        precomputed (the certified path needs the raw cost
+                        for the gap as well, so it computes cost once).
+      gap_of(split, target, cost, demand) -> scalar Frank-Wolfe duality
+                        gap sum_f demand_f * <split_f - target_f, cost_f>.
+      cert_equilibrate(split0, demand, max_iters, util_tol, t0, decide_at)
+                        gap-driven conjugate line-search Frank-Wolfe; see
+                        below.
+
+    `dtype` pins the arithmetic precision of every closure (the uncertified
+    engines always pass float32 -- explicitly, so enabling JAX_ENABLE_X64
+    for a certified run does not silently promote them; certified runs pass
+    float64 when x64 is enabled).
 
     Link loads use the incidence structure from `FlowPaths.device_arrays`:
     a padded per-edge gather matrix in the common case (XLA:CPU serializes
@@ -139,12 +365,39 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
     into their consuming gathers, which would serialize them; `barrier=False`
     drops them (JAX 0.4.37 has no vmap batching rule for
     `optimization_barrier`, so the vmapped batch solver cannot use them).
+
+    `cert_equilibrate(split0, demand, max_iters, util_tol, t0=0.0,
+    decide_at=None)` returns `(split, rho, gap, mu_lb, mu_ub, iters,
+    converged)`.  It runs `_CERT_STRIDE`-step chunks inside a
+    lax.while_loop.  For mode="ugal" each step is conjugate Frank-Wolfe
+    with an exact line search on the Beckmann potential (bisection on the
+    monotone directional derivative <delta_rho, 1 + w(rho + gamma *
+    delta_rho)>; link loads updated incrementally since they are linear in
+    the split); for mode="ugal_pf" each step is the uncertified engines'
+    harmonic 2/(t0+t+2) step toward the gated target (line search on the
+    potential is meaningless for the gated dynamic).  At every chunk
+    boundary the link loads are refreshed from the split (shedding the
+    incremental update's accumulated rounding), the duality gap is
+    recomputed, and `_util_interval` turns it into the certified max-util
+    bracket [mu_lb, mu_ub]; `mu_lb` is additionally maxed with the
+    potential-mass bound (`_phi_mass_lower_bound`), which is what actually
+    fires on deeply infeasible loads where the capped integrand's linear
+    region blinds the Bregman bracket.  The loop exits early when the
+    bracket is tighter than `util_tol` -- or, with `decide_at` set, as
+    soon as the bracket certifies max_util* to be on either side of
+    `decide_at` (the bisection early-exit).  Oblivious modes return
+    immediately with gap 0 and a zero-width bracket.
     """
-    minvec = jnp.where(is_min, 1.0, 0.0)
+    minvec = jnp.where(is_min, 1.0, 0.0).astype(dtype)
     nmin = jnp.maximum(minvec.sum(axis=1, keepdims=True), 1)
     minvec = minvec / nmin
-    uniform = valid / jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+    uniform = (valid / jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+               ).astype(dtype)
     has_alt = (valid & ~is_min).any(axis=1)
+    # longest valid candidate path per flow, in links: any split satisfies
+    # sum_e rho_e <= sum_f demand_f * lmax_f (the potential-mass
+    # infeasibility certificate's load-conservation budget)
+    lmax = jnp.where(valid, (eidx < num_links).sum(-1), 0).max(axis=1)
 
     def _barrier(x):
         return jax.lax.optimization_barrier(x) if barrier else x
@@ -153,23 +406,23 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         w = (split * demand[:, None]).reshape(-1)  # [F*K]
         if loads_kind == "pad":
             (inc,) = loads_arrays
-            w = _barrier(jnp.concatenate([w, jnp.zeros(1)]))
+            w = _barrier(jnp.concatenate([w, jnp.zeros(1, w.dtype)]))
             return w[inc].sum(axis=1)  # [E]
         # "scatter" fallback for pathologically skewed incidence counts:
         # slower, but rounding stays proportional to each edge's own load
         w3 = w.reshape(eidx.shape[0], eidx.shape[1], 1) \
-            * (eidx < num_links).astype(jnp.float32)
-        rho = jnp.zeros(num_links + 1).at[eidx.reshape(-1)].add(w3.reshape(-1))  # reprolint: allow[scatter-add] -- deliberate fallback for pathologically skewed incidence where the padded gather would blow memory; FlowPaths.device_arrays picks the pad path whenever it fits
+            * (eidx < num_links).astype(w.dtype)
+        rho = jnp.zeros(num_links + 1, w.dtype).at[eidx.reshape(-1)].add(w3.reshape(-1))  # reprolint: allow[scatter-add] -- deliberate fallback for pathologically skewed incidence where the padded gather would blow memory; FlowPaths.device_arrays picks the pad path whenever it fits
         return rho[:num_links]  # [E]
 
     def cost_of(rho):
         delay = 1.0 + _queue_delay(rho)
-        d = _barrier(jnp.concatenate([delay, jnp.zeros(1)]))  # pad slot
-        return d[eidx].sum(-1)  # [F,K]
+        d = _barrier(jnp.concatenate([delay, jnp.zeros(1, delay.dtype)]))
+        return path_costs(d, eidx)  # [F,K]
 
-    def fw_target(split, rho):
-        cost = jnp.where(valid, cost_of(rho), jnp.inf)
-        target = jax.nn.one_hot(jnp.argmin(cost, axis=1), split.shape[1])
+    def target_of(split, rho, cost):
+        target = jax.nn.one_hot(jnp.argmin(cost, axis=1), split.shape[1],
+                                dtype=split.dtype)
         if mode == "ugal_pf":
             # the 2/3 local-occupancy adaptation threshold (paper
             # §VII-C): occupancy is of the 128-flit (32-packet) output
@@ -182,6 +435,18 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
             target = gate[:, None] * target + (1 - gate)[:, None] * minvec
         return target
 
+    def fw_target(split, rho):
+        return target_of(split, rho, jnp.where(valid, cost_of(rho), jnp.inf))
+
+    def gap_of(split, target, cost, demand):
+        # per-flow inner products first: the gap is a difference of
+        # near-equal inner products, and the per-flow form keeps the
+        # cancellation local (each <split_f - target_f, cost_f> is already
+        # O(gap_f)) instead of subtracting two global sums
+        c = jnp.where(valid, cost, 0.0)
+        per_flow = ((split - target) * c).sum(axis=1)
+        return (demand * per_flow).sum()
+
     def equilibrate(split0, demand, iters: int, t0: float = 0.0):
         if mode not in ("ugal", "ugal_pf"):
             return split0
@@ -192,11 +457,165 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
             return (1 - gamma) * split + gamma * fw_target(split, rho), None
 
         split, _ = jax.lax.scan(
-            body, split0, t0 + jnp.arange(iters, dtype=jnp.float32))
+            body, split0, t0 + jnp.arange(iters, dtype=dtype))
         return split
 
+    # exact line search on gamma in [0, 1]: a short bisection brackets the
+    # root of the monotone derivative, then a few false-position (secant
+    # within the bracket) steps polish it.  Every derivative evaluation is
+    # an O(E) pass, and at scale (PF(79): E ~ 5e5 directed links) the
+    # search rivals the [F, K, L] cost gather itself, so the eval count is
+    # the budget that matters: 2+10+3 evals here beat the former
+    # 20-halving search on cost AND on accuracy where it counts --
+    # above-cap links make the derivative piecewise *linear* in gamma, and
+    # secant interpolation is exact on linear pieces where pure bisection
+    # (or Newton, whose curvature estimate explodes at the cap) stalls at
+    # bracket resolution, which is what let infeasible probes stall with
+    # capped-slope-sized gaps.  fp64 certification chases much smaller
+    # gaps; it digs a deeper bracket first.
+    ls_halvings = 20 if jnp.dtype(dtype) == jnp.float64 else 10
+
+    def _line_search(rho, drho):
+        """argmin_gamma Phi(rho + gamma * drho) over [0, 1]: bisection +
+        false-position polish on the monotone derivative
+        d Phi/d gamma = <drho, 1 + w(rho + g*drho)> (Phi is convex along
+        the segment; `drho` is a descent direction whenever the duality
+        gap is positive)."""
+        def dphi(g):
+            return (drho * (1.0 + _queue_delay(rho + g * drho))).sum()
+
+        def interp(lo, dlo, hi, dhi):
+            denom = dhi - dlo
+            g = jnp.where(denom > 0, lo - dlo * (hi - lo) / denom,
+                          0.5 * (lo + hi))
+            return jnp.clip(g, lo, hi)
+
+        def shrink(carry, g):
+            lo, dlo, hi, dhi = carry
+            dg = dphi(g)
+            pos = dg > 0
+            return (jnp.where(pos, lo, g), jnp.where(pos, dlo, dg),
+                    jnp.where(pos, g, hi), jnp.where(pos, dg, dhi))
+
+        def half(carry, _):
+            lo, dlo, hi, dhi = carry
+            return shrink(carry, 0.5 * (lo + hi)), None
+
+        def polish(carry, _):
+            lo, dlo, hi, dhi = carry
+            return shrink(carry, interp(lo, dlo, hi, dhi)), None
+
+        zero, one = jnp.zeros((), dtype), jnp.ones((), dtype)
+        d1 = dphi(one)
+        carry = (zero, dphi(zero), one, d1)
+        carry, _ = jax.lax.scan(half, carry, None, length=ls_halvings)
+        carry, _ = jax.lax.scan(polish, carry, None, length=3)
+        return jnp.where(d1 <= 0, one, interp(*carry))
+
+    def cert_equilibrate(split0, demand, max_iters: int, util_tol,
+                         t0: float = 0.0, decide_at=None):
+        rho0 = loads(split0, demand)
+        if mode not in ("ugal", "ugal_pf"):
+            mu0 = _max_util(rho0, num_links).astype(dtype)
+            return (split0, rho0, jnp.zeros((), dtype), mu0, mu0,
+                    jnp.zeros((), jnp.int32), jnp.ones((), bool))
+
+        def residual(split, rho):
+            cost = cost_of(rho)
+            target = target_of(split, rho, jnp.where(valid, cost, jnp.inf))
+            return gap_of(split, target, cost, demand)
+
+        def step_ugal(carry, _):
+            # conjugate Frank-Wolfe (Mitradjieva-Lindberg CFW): combine the
+            # previous combined target with the fresh best response so that
+            # successive search directions are conjugate w.r.t. the diagonal
+            # Beckmann Hessian in load space, then take an exact line-search
+            # step -- vanilla FW's O(1/t) zigzag stalls the gap around 1 on
+            # PF(13) at budgets where CFW is already at certification level
+            split, rho, sbar, rbar = carry
+            cost = cost_of(rho)
+            target = target_of(split, rho, jnp.where(valid, cost, jnp.inf))
+            rho_t = loads(target, demand)
+            h = _queue_delay_prime(rho)
+            a = rbar - rho
+            b = rho_t - rho
+            bha = (b * h * a).sum()
+            aha = (a * h * a).sum()
+            beta = bha / (bha - aha)
+            beta = jnp.clip(jnp.where(jnp.isfinite(beta), beta, 0.0),
+                            0.0, 0.999)
+            r_comb = beta * rbar + (1 - beta) * rho_t
+            # keep it a descent direction; plain FW direction otherwise
+            desc = ((r_comb - rho) * (1.0 + _queue_delay(rho))).sum() < 0
+            beta = jnp.where(desc, beta, 0.0)
+            s_comb = beta * sbar + (1 - beta) * target
+            r_comb = beta * rbar + (1 - beta) * rho_t
+            gamma = _line_search(rho, r_comb - rho)
+            # loads are linear in the split, so rho tracks incrementally
+            return (split + gamma * (s_comb - split),
+                    rho + gamma * (r_comb - rho), s_comb, r_comb), None
+
+        def step_pf(carry, i):
+            # UGAL_PF's gated target is not a linear-minimization oracle
+            # (the residual can be negative), so line search on the
+            # potential is meaningless: keep the harmonic schedule -- the
+            # exact per-step math of the uncertified engines -- and let the
+            # residual be the stopping/early-exit signal
+            split, rho, sbar, rbar = carry
+            target = fw_target(split, rho)
+            gamma = 2.0 / (i + 2.0)
+            return (split + gamma * (target - split),
+                    rho + gamma * (loads(target, demand) - rho),
+                    sbar, rbar), None
+
+        step = step_ugal if mode == "ugal" else step_pf
+
+        traversals = (demand * lmax.astype(dtype)).sum()
+
+        def done_of(gap, rho):
+            # abs: the gated-residual mode's gap can go negative
+            resid = jnp.abs(gap)
+            mu_lb, mu_ub = _util_interval(rho, resid, num_links)
+            # Phi(rho) - gap lower-bounds Phi*; the mass bound turns that
+            # into the infeasible-side certificate the Bregman bracket
+            # cannot provide (see _phi_mass_lower_bound)
+            phi = (rho + _w_integral(rho)).sum()
+            mu_lb = jnp.maximum(
+                mu_lb, _phi_mass_lower_bound(phi - resid, traversals))
+            done = (mu_ub - mu_lb) <= util_tol
+            if decide_at is not None:
+                done = done | (mu_ub <= decide_at) | (mu_lb > decide_at)
+            return mu_lb, mu_ub, done
+
+        def body(carry):
+            split, rho, sbar, rbar = carry[:4]
+            t = carry[6]
+            (split, rho, sbar, rbar), _ = jax.lax.scan(
+                step, (split, rho, sbar, rbar),
+                t0 + t.astype(dtype) + jnp.arange(_CERT_STRIDE, dtype=dtype))
+            rho = loads(split, demand)  # shed incremental-update rounding
+            gap = residual(split, rho)
+            mu_lb, mu_ub, done = done_of(gap, rho)
+            return (split, rho, sbar, rbar, gap, (mu_lb, mu_ub),
+                    t + _CERT_STRIDE, done)
+
+        def cond(carry):
+            return (~carry[7]) & (carry[6] < max_iters)
+
+        gap0 = residual(split0, rho0)
+        lb0, ub0, done0 = done_of(gap0, rho0)
+        # sbar = split0 makes the first conjugate combination degenerate
+        # (a = 0 -> beta guarded to 0), i.e. a plain FW first step
+        carry = (split0, rho0, split0, rho0, gap0, (lb0, ub0),
+                 jnp.zeros((), jnp.int32), done0)
+        out = jax.lax.while_loop(cond, body, carry)
+        split, rho, gap, (mu_lb, mu_ub), t, done = (
+            out[0], out[1], out[4], out[5], out[6], out[7])
+        return split, rho, gap, mu_lb, mu_ub, t, done
+
     init = minvec if mode in ("min", "ugal", "ugal_pf") else uniform
-    return init, equilibrate, loads, cost_of, fw_target
+    return _FWPieces(init, equilibrate, loads, cost_of, fw_target,
+                     target_of, gap_of, cert_equilibrate)
 
 
 def _max_util(rho, num_links: int):
@@ -222,13 +641,13 @@ def _metrics(split, rho, cost, valid, hops, demand, offered, num_links: int):
 def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
            num_links: int, mode: str, offered: float, iters: int = 250):
     """Single-load reference solve: (split [F,K], rho [E], cost [F,K])."""
-    init, equilibrate, loads, cost_of, _ = _fw_pieces(
+    fw = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode)
     demand = demand * offered  # [F]
-    split = equilibrate(init, demand, iters)
-    rho = loads(split, demand)
-    return split, rho, cost_of(rho)
+    split = fw.equilibrate(fw.init, demand, iters)
+    rho = fw.loads(split, demand)
+    return split, rho, fw.cost_of(rho)
 
 
 @functools.partial(jax.jit,
@@ -239,15 +658,15 @@ def _solve_batch(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                  iters: int = 250):
     """vmap of the cold-start equilibrium over a vector of offered loads;
     one compiled call evaluates the whole latency sweep."""
-    init, equilibrate, loads, cost_of, _ = _fw_pieces(
+    fw = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode, barrier=False)
 
     def one(offered):
         d = demand * offered
-        split = equilibrate(init, d, iters)
-        rho = loads(split, d)
-        return _metrics(split, rho, cost_of(rho), valid, hops, demand,
+        split = fw.equilibrate(fw.init, d, iters)
+        rho = fw.loads(split, d)
+        return _metrics(split, rho, fw.cost_of(rho), valid, hops, demand,
                         offered, num_links)
 
     return jax.vmap(one)(offered_vec)
@@ -283,19 +702,19 @@ def _saturation_batch(eidx, loads_arrays, loads_kind, valid, is_min,
     step-size schedule at `_WARM_T0` (the probes are unrolled, so each gets
     its own static trip count).
     """
-    init, equilibrate, loads, _, _ = _fw_pieces(
+    fw = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode)
-    split = equilibrate(init, demand, iters)  # offered = 1.0
-    max1 = _max_util(loads(split, demand), num_links)
+    split = fw.equilibrate(fw.init, demand, iters)  # offered = 1.0
+    max1 = _max_util(fw.loads(split, demand), num_links)
 
     lo = jnp.zeros((), jnp.float32)
     hi = jnp.ones((), jnp.float32)
     for probe_iters in probe_schedule:
         mid = 0.5 * (lo + hi)
         d = demand * mid
-        split = equilibrate(split, d, probe_iters, t0=_WARM_T0)
-        feasible = _max_util(loads(split, d), num_links) <= 1.0
+        split = fw.equilibrate(split, d, probe_iters, t0=_WARM_T0)
+        feasible = _max_util(fw.loads(split, d), num_links) <= 1.0
         lo = jnp.where(feasible, mid, lo)
         hi = jnp.where(feasible, hi, mid)
     return jnp.where(max1 <= 1.0, jnp.ones((), jnp.float32), lo)
@@ -309,22 +728,152 @@ def _truncation_gap(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
     """L-inf gap between last-iterate and averaged Frank-Wolfe link loads
     after `iters` steps from the cold-start split at `offered` load (the
     estimated truncation error reported by `saturation_throughput`)."""
-    init, _, loads, _, fw_target = _fw_pieces(
+    fw = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode)
     d = demand * offered
 
     def body(carry, t):
         split, acc = carry
-        rho = loads(split, d)
+        rho = fw.loads(split, d)
         gamma = 2.0 / (t + 2.0)
-        return ((1 - gamma) * split + gamma * fw_target(split, rho),
+        return ((1 - gamma) * split + gamma * fw.fw_target(split, rho),
                 acc + rho), None
 
     (split, acc), _ = jax.lax.scan(
-        body, (init, jnp.zeros(num_links)),
+        body, (fw.init, jnp.zeros(num_links, jnp.float32)),
         jnp.arange(iters, dtype=jnp.float32))
-    return jnp.max(jnp.abs(loads(split, d) - acc / iters))
+    return jnp.max(jnp.abs(fw.loads(split, d) - acc / iters))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "max_iters", "dtype"))
+def _certified_solve(eidx, loads_arrays, loads_kind, valid, is_min,
+                     first_edge, demand, hops, num_links: int, mode: str,
+                     offered, util_tol, max_iters: int, dtype: str):
+    """Single-load certified solve: metrics + (gap, mu_lb, mu_ub, iters,
+    converged)."""
+    dt = jnp.dtype(dtype)
+    fw = _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min,
+                    first_edge, num_links, mode, dtype=dt)
+    dbase = demand.astype(dt)
+    d = dbase * offered
+    split, rho, gap, mu_lb, mu_ub, iters, ok = fw.cert_equilibrate(
+        fw.init, d, max_iters, util_tol)
+    metrics = _metrics(split, rho, fw.cost_of(rho), valid, hops, dbase,
+                       offered, num_links)
+    return metrics + (gap, mu_lb, mu_ub, iters, ok)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "max_iters", "dtype"))
+def _certified_batch(eidx, loads_arrays, loads_kind, valid, is_min,
+                     first_edge, demand, hops, num_links: int, mode: str,
+                     offered_vec, util_tol, max_iters: int, dtype: str):
+    """vmap of the certified equilibrium over a vector of offered loads
+    (the certify=True latency sweep; barriers off as in `_solve_batch`)."""
+    dt = jnp.dtype(dtype)
+    fw = _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min,
+                    first_edge, num_links, mode, barrier=False, dtype=dt)
+    dbase = demand.astype(dt)
+
+    def one(offered):
+        d = dbase * offered
+        split, rho, gap, mu_lb, mu_ub, iters, ok = fw.cert_equilibrate(
+            fw.init, d, max_iters, util_tol)
+        m = _metrics(split, rho, fw.cost_of(rho), valid, hops, dbase,
+                     offered, num_links)
+        return m + (gap, mu_lb, mu_ub, iters, ok)
+
+    return jax.vmap(one)(offered_vec)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "max_iters", "probes", "dtype"))
+def _certified_saturation(eidx, loads_arrays, loads_kind, valid, is_min,
+                          first_edge, demand, num_links: int, mode: str,
+                          util_tol, max_iters: int, probes: int, dtype: str):
+    """In-jit certified saturation bisection with gap early-exit probes.
+
+    Probe sequence mirrors `_saturation_batch` (offered = 1.0 first, then
+    `probes` bisection steps over [0, 1], each warm-started from the
+    previous probe's split at `_WARM_T0`), but every probe runs
+    `cert_equilibrate` with `decide_at=1.0`: it stops as soon as the gap's
+    per-link utilization bracket certifies the probe's feasibility either
+    way -- the uncertified engine's fixed per-probe budgets become
+    data-dependent early exits.  Alongside the bisection's measured
+    (lo, hi) it narrows a *certified* bracket: `lo_c` rises only on
+    certified-feasible probes and `hi_c` falls only on certified-infeasible
+    ones.
+
+    Returns (sat, lo_c, hi_c, gap, mu_lb, mu_ub, total_iters,
+    all_converged) with gap / bracket from the final probe.
+    """
+    dt = jnp.dtype(dtype)
+    fw = _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min,
+                    first_edge, num_links, mode, dtype=dt)
+    d1 = demand.astype(dt)
+    split, rho, gap, mu_lb, mu_ub, it, ok = fw.cert_equilibrate(
+        fw.init, d1, max_iters, util_tol, decide_at=1.0)
+    mu1 = _max_util(rho, num_links)
+    total = it
+    all_ok = ok
+
+    one = jnp.ones((), dt)
+    lo, hi = jnp.zeros((), dt), one
+    lo_c = jnp.where(mu_ub <= 1.0, one, jnp.zeros((), dt))
+    hi_c = one
+    for _ in range(probes):
+        mid = 0.5 * (lo + hi)
+        dd = d1 * mid
+        split, rho, gap, mu_lb, mu_ub, it, ok = fw.cert_equilibrate(
+            split, dd, max_iters, util_tol, t0=_WARM_T0, decide_at=1.0)
+        feasible = _max_util(rho, num_links) <= 1.0
+        lo = jnp.where(feasible, mid, lo)
+        hi = jnp.where(feasible, hi, mid)
+        lo_c = jnp.where(mu_ub <= 1.0, jnp.maximum(lo_c, mid), lo_c)
+        hi_c = jnp.where(mu_lb > 1.0, jnp.minimum(hi_c, mid), hi_c)
+        total = total + it
+        all_ok = all_ok & ok
+    sat = jnp.where(mu1 <= 1.0, one, lo)
+    return sat, lo_c, hi_c, gap, mu_lb, mu_ub, total, all_ok
+
+
+def _cert_params(mode: str, util_tol, dtype, iters: int, cert_iters):
+    """Resolve the certify=True knobs: (dtype, util_tol, max_iters, kind).
+    fp64 certification is gated on JAX_ENABLE_X64 (the olmax test.sh
+    idiom): with x64 enabled the default dtype is float64, without it
+    requesting float64 raises instead of silently truncating, and the
+    default `util_tol` tightens 0.05 -> 0.01 because fp64 can resolve the
+    smaller duality gaps the tighter bracket needs (the fp32 gap's noise
+    floor is an inner-product cancellation, ~1e-3 * total demand)."""
+    x64 = bool(jax.config.jax_enable_x64)
+    if dtype is None:
+        dtype = "float64" if x64 else "float32"
+    if dtype not in ("float32", "float64"):
+        raise ValueError(f"unsupported certification dtype {dtype!r}")
+    if dtype == "float64" and not x64:
+        raise ValueError(
+            "dtype='float64' certification needs JAX_ENABLE_X64=1 in the "
+            "environment before jax is imported (see docs/benchmarks.md)")
+    if util_tol is None:
+        util_tol = 0.01 if dtype == "float64" else 0.05
+    max_iters = int(cert_iters) if cert_iters is not None \
+        else max(int(iters), 2000)
+    kind = {"ugal": "duality-gap", "ugal_pf": "gated-residual"}.get(
+        mode, "exact")
+    return dtype, float(util_tol), max_iters, kind
+
+
+def _certificate(gap, mu_lb, mu_ub, iters, ok, util_tol, dtype, kind):
+    lb, ub = float(mu_lb), float(mu_ub)
+    return Certificate(gap=float(gap), util_lb=lb, util_ub=ub,
+                       util_err_bound=ub - lb, util_tol=util_tol,
+                       iters=int(iters), dtype=dtype, converged=bool(ok),
+                       kind=kind)
 
 
 def _as_flow_paths(fp) -> FlowPaths:
@@ -352,8 +901,29 @@ def _run(fp: FlowPaths, offered: float, iters: int):
                   iters)
 
 
-def evaluate_load(fp, offered: float, iters: int = 250) -> FluidResult:
+def evaluate_load(fp, offered: float, iters: int = 250,
+                  certify: bool = False, util_tol: float = None,
+                  dtype: str = None, cert_iters: int = None):
+    """FluidResult at one offered load; with `certify=True`, a
+    `CertifiedResult` wrapping the FluidResult whose certificate bounds the
+    reported utilizations' distance from the exact equilibrium (gap-driven
+    line-search Frank-Wolfe instead of a fixed `iters` budget; `cert_iters`
+    caps the certified run, default max(iters, 2000))."""
     fp = _as_flow_paths(fp)
+    if certify:
+        dtype, util_tol, max_iters, kind = _cert_params(
+            fp.mode, util_tol, dtype, iters, cert_iters)
+        eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
+            fp.device_arrays()
+        acc, mu, lat, hop, gap, mu_lb, mu_ub, it, ok = _certified_solve(
+            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
+            demand, hops, fp.num_links, fp.mode, float(offered), util_tol,
+            max_iters, dtype)
+        res = FluidResult(offered=float(offered), accepted=float(acc),
+                          max_util=float(mu), mean_latency=float(lat),
+                          mean_hops=float(hop))
+        return CertifiedResult(value=res, cert=_certificate(
+            gap, mu_lb, mu_ub, it, ok, util_tol, dtype, kind))
     split, rho, cost = _run(fp, offered, iters)
     split = np.asarray(split)
     rho = np.asarray(rho)
@@ -370,7 +940,9 @@ def evaluate_load(fp, offered: float, iters: int = 250) -> FluidResult:
 
 def saturation_throughput(fp, tol: float = 0.005,
                           iters: int = 250, engine: str = "batched",
-                          probe_iters: int = 0, return_info: bool = False):
+                          probe_iters: int = 0, return_info: bool = False,
+                          certify: bool = False, util_tol: float = None,
+                          dtype: str = None, cert_iters: int = None):
     """Largest per-endpoint offered load with max link utilization <= 1
     (bisection; adaptive splits re-equilibrate at every probe).  `fp` is a
     FlowPaths or a sequence of FlowPaths chunks (concatenated on entry).
@@ -385,8 +957,36 @@ def saturation_throughput(fp, tol: float = 0.005,
     load (last-iterate vs averaged link loads after a cold `iters`-step
     solve), so callers can see when `iters` is too low for the bisection
     tolerance instead of relying on the iters >= 3000 rule of thumb.
+
+    With `certify=True` the result is a `CertifiedResult`: the bisection
+    runs gap-driven probes that early-exit on certified feasibility
+    decisions (`_certified_saturation`), `value` is the saturation float
+    and `[sat_lo, sat_hi]` the certified bracket.  `util_tol` / `dtype` /
+    `cert_iters` are the certification knobs (`_cert_params`); `certify`
+    supersedes `return_info` (the certificate's gap replaces the
+    truncation-error heuristic) and `probe_iters` (budgets are
+    gap-driven).
     """
     fp = _as_flow_paths(fp)
+    if certify:
+        if return_info:
+            raise ValueError("return_info is subsumed by certify=True: the "
+                             "certificate's gap bounds the truncation error")
+        dtype, util_tol, max_iters, kind = _cert_params(
+            fp.mode, util_tol, dtype, iters, cert_iters)
+        probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
+        eidx, loads_rep, valid, is_min, first_edge, demand, _ = \
+            fp.device_arrays()
+        sat, lo_c, hi_c, gap, mu_lb, mu_ub, total_it, ok = \
+            _certified_saturation(
+                eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                first_edge, demand, fp.num_links, fp.mode, util_tol,
+                max_iters, probes, dtype)
+        return CertifiedResult(
+            value=float(sat),
+            cert=_certificate(gap, mu_lb, mu_ub, total_it, ok, util_tol,
+                              dtype, kind),
+            sat_lo=float(lo_c), sat_hi=float(hi_c))
     if engine == "batched":
         probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
         sched = ((probe_iters,) * probes if probe_iters > 0
@@ -431,14 +1031,36 @@ def truncation_error(fp, offered: float, iters: int = 250) -> float:
                                  fp.mode, float(offered), iters))
 
 
-def latency_curve(fp, loads, iters: int = 250,
-                  engine: str = "batched") -> List[FluidResult]:
+def latency_curve(fp, loads, iters: int = 250, engine: str = "batched",
+                  certify: bool = False, util_tol: float = None,
+                  dtype: str = None, cert_iters: int = None):
     """FluidResult per offered load.  engine="batched" (default) evaluates
     every load in one compiled vmapped call; engine="scalar" dispatches
     `evaluate_load` per load (the reference).  `fp` may be a sequence of
-    FlowPaths chunks (concatenated on entry)."""
+    FlowPaths chunks (concatenated on entry).  With `certify=True`, one
+    vmapped certified call returning a `CertifiedResult` per load (each
+    wrapping its FluidResult, with a per-load certificate)."""
     fp = _as_flow_paths(fp)
     loads = [float(l) for l in loads]
+    if certify:
+        dtype, util_tol, max_iters, kind = _cert_params(
+            fp.mode, util_tol, dtype, iters, cert_iters)
+        eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
+            fp.device_arrays()
+        vec = jnp.asarray(np.asarray(loads, dtype=dtype))
+        acc, mx, lat, hop, gap, mu_lb, mu_ub, it, ok = _certified_batch(
+            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
+            demand, hops, fp.num_links, fp.mode, vec, util_tol, max_iters,
+            dtype)
+        return [CertifiedResult(
+                    value=FluidResult(offered=l, accepted=float(a),
+                                      max_util=float(m), mean_latency=float(la),
+                                      mean_hops=float(h)),
+                    cert=_certificate(g, lb, ub, i, o, util_tol, dtype, kind))
+                for l, a, m, la, h, g, lb, ub, i, o in zip(
+                    loads, np.asarray(acc), np.asarray(mx), np.asarray(lat),
+                    np.asarray(hop), np.asarray(gap), np.asarray(mu_lb),
+                    np.asarray(mu_ub), np.asarray(it), np.asarray(ok))]
     if engine == "batched":
         eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
             fp.device_arrays()

@@ -18,3 +18,17 @@ def g(x):
 @functools.partial(jax.jit, static_argnames=("k",))
 def h(x, k):
     return np.asarray(x)[:k]
+
+
+def assigned(x):
+    return float(x) + 1.0
+
+
+assigned_jit = jax.jit(assigned)
+
+
+def wrapped(idx):
+    return int(idx)
+
+
+mapped = jax.jit(shard_map(wrapped, mesh=None))  # noqa: F821 -- parsed, never run

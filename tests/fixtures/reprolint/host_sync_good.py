@@ -21,3 +21,14 @@ def static_arg(x, scale):
 @jax.jit
 def suppressed(x):
     return int(x)  # reprolint: allow[host-sync] -- fixture: pragma suppression must work
+
+
+def assigned_static(x, scale):
+    return x * float(scale)  # static under the assignment-form jit below
+
+
+assigned_static_jit = jax.jit(assigned_static, static_argnames=("scale",))
+
+
+def never_jitted_by_name(x):
+    return float(x)  # same name pattern, but no jit(...) call targets it

@@ -162,6 +162,36 @@ def test_run_blocks_auto_stays_on_host_without_mesh():
     assert calls == []
 
 
+def test_run_blocks_reuses_compiled_mapper_across_calls():
+    """A stable device_fn compiles once: a second run_blocks call with the
+    same plan must not retrace (the jitted shard_map wrapper is cached
+    across calls), and a different block size reuses the cached wrapper
+    with exactly one fresh trace for the new shape."""
+    pytest.importorskip("jax")
+    traces = []
+
+    def device_fn(blk):
+        traces.append(1)  # fires once per trace, never per execution
+        return blk * 2
+
+    items = np.arange(12, dtype=np.int64)
+    plan = plan_blocks(12, block=4, devices=1)
+    first = list(run_blocks(items, plan, lambda b: b * 2, device_fn,
+                            backend="sharded"))
+    n0 = len(traces)
+    assert n0 >= 1
+    second = list(run_blocks(items, plan, lambda b: b * 2, device_fn,
+                             backend="sharded"))
+    assert len(traces) == n0
+    for (fb, fo), (sb, so) in zip(first, second):
+        np.testing.assert_array_equal(fb, sb)
+        np.testing.assert_array_equal(np.asarray(fo[0]), np.asarray(so[0]))
+    plan2 = plan_blocks(12, block=6, devices=1)
+    list(run_blocks(items, plan2, lambda b: b * 2, device_fn,
+                    backend="sharded"))
+    assert len(traces) == n0 + 1
+
+
 # ---------------------------------------------------------------------------
 # ported engines: sharded backend == host loop on the real topologies
 # ---------------------------------------------------------------------------

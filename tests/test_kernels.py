@@ -10,8 +10,9 @@ from repro.core.routing import all_pairs_distances
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.flash_attention.ref import attention_chunked, attention_ref
 from repro.kernels.gf_crossprod.ops import intermediate_table
-from repro.kernels.minplus.ops import apsp, minplus
-from repro.kernels.minplus.ref import minplus_ref
+from repro.kernels.minplus.kernel import path_costs_pallas
+from repro.kernels.minplus.ops import apsp, minplus, path_costs
+from repro.kernels.minplus.ref import minplus_ref, path_costs_ref
 
 
 @pytest.mark.parametrize("shape", [(64, 64, 64), (130, 70, 50), (256, 33, 128)])
@@ -41,6 +42,30 @@ def test_minplus_associativity_with_identity(m, n):
     eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, 3.0e38 / 4).astype(jnp.float32)
     out = minplus(a, eye, use_pallas=True, block=32)
     assert np.allclose(out, a, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(5, 3, 4), (300, 8, 5), (1, 1, 1)])
+def test_path_costs_pallas_matches_ref(shape):
+    """The fluid engines' per-candidate path-cost reduction: the tiled
+    Pallas kernel (interpret mode on CPU) must be bit-identical to the
+    jnp twin, including pad-slot gathers (index E reads the zero slot)
+    and flow tiles that do not divide the tile width."""
+    f, k, l = shape
+    rng = np.random.default_rng(f * 7 + k * 3 + l)
+    e = 37
+    delay = jnp.asarray(np.concatenate(
+        [rng.random(e).astype(np.float32) * 5, np.zeros(1, np.float32)]))
+    eidx = jnp.asarray(rng.integers(0, e + 1, size=(f, k, l)), jnp.int32)
+    ref = path_costs_ref(delay, eidx)
+    pal = path_costs_pallas(delay, eidx, bf=256, interpret=True)
+    assert np.array_equal(np.asarray(pal), np.asarray(ref))
+    # dispatcher: the CPU default routes to the ref twin; forcing the
+    # kernel (with a tile width that does not divide F) changes nothing
+    assert np.array_equal(np.asarray(path_costs(delay, eidx)),
+                          np.asarray(ref))
+    assert np.array_equal(
+        np.asarray(path_costs(delay, eidx, use_pallas=True, block=64)),
+        np.asarray(ref))
 
 
 @pytest.mark.parametrize("q", [3, 5, 7, 11])

@@ -30,7 +30,7 @@ def run_rule(rule_id, fixture):
 @pytest.mark.parametrize("rule_id,bad,expected", [
     ("dense-square", "dense_square_bad.py", 5),
     ("scatter-add", "scatter_add_bad.py", 1),
-    ("host-sync", "host_sync_bad.py", 3),
+    ("host-sync", "host_sync_bad.py", 5),
     ("naked-clock", "naked_clock_bad.py", 4),
     ("compat-shim", "compat_shim_bad.py", 4),
     ("sentinel", "sentinel_bad.py", 3),
