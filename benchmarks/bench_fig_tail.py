@@ -1,0 +1,112 @@
+"""Tail-latency figure: p50/p99/p999 from the flit-level packet engine.
+
+The transient/tail tier the fluid figures can't cover (they are
+steady-state by construction): per-packet latency distributions under
+steady uniform load, mean-preserving on-off bursts, and a mid-run
+link-failure transient with re-routed tables -- the quantities the Slim
+Fly deployment study reports from hardware counters.  Every row carries
+`p50=..;p99=..;p999=..` so `benchmarks.run` lifts them into the
+`tails` table of BENCH_<TIER>.json.
+
+SMOKE runs PF(7); FULL runs PF(13); BENCH_LARGE adds a PF(79)
+sampled-flow point through the blocked routing stack (the per-cycle
+state there is ~500k directed links -- the dense [E, Q] queue matrix
+stays ~65 MB and nothing allocates [n, n]).  A reference-vs-batched row
+on the small graph keeps the two-engine speedup visible, and the
+batched rows are timed with compile excluded (house rule: compile
+outside the timed region)."""
+import numpy as np
+
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_blocked_routing, build_routing
+from repro.simulation import (BurstSchedule, build_failure_workload,
+                              build_flow_paths, make_pattern, make_workload,
+                              simulate_packets, simulate_packets_reference)
+
+from .common import emit, large, smoke, timed
+
+CYCLES = 600
+FAIL_AT = 250
+
+
+def _tail_row(name: str, us: float, wl, res) -> None:
+    t = res.tails()
+    assert t["p50"] <= t["p99"] <= t["p999"]
+    emit(name, us,
+         f"p50={t['p50']};p99={t['p99']};p999={t['p999']};"
+         f"delivered={res.num_delivered};dropped={res.num_dropped};"
+         f"P={wl.num_packets}")
+
+
+def _point(tag: str, wl) -> None:
+    simulate_packets(wl)  # compile
+    res, us = timed(lambda: simulate_packets(wl))
+    _tail_row(tag, us, wl, res)
+
+
+def run():
+    q = 7 if smoke() else 13
+    pf = build_polarfly(q)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("uniform", rt, p=(q + 1) // 2, seed=0)
+
+    # 0.8 offered: high enough that queueing shapes the tail, below the
+    # uniform saturation point of both modes
+    for mode, offered in (("min", 0.8), ("ugal_pf", 0.8)):
+        fp = build_flow_paths(rt, pat, mode, k_candidates=8, seed=0)
+        _point(f"tail.pf{q}.uniform.{mode}.steady",
+               make_workload(fp, offered, CYCLES, seed=0))
+        _point(f"tail.pf{q}.uniform.{mode}.burst",
+               make_workload(fp, offered, CYCLES, seed=0,
+                             burst=BurstSchedule(on=20, off=60)))
+
+    # tornado at 0.2: right under min's ~1/p collapse point, easy for
+    # UGAL -- Fig. 9's adaptive-routing story retold as a tail contrast
+    tpat = make_pattern("tornado", rt, p=(q + 1) // 2)
+    for mode in ("min", "ugal"):
+        fp = build_flow_paths(rt, tpat, mode, k_candidates=8, seed=0)
+        _point(f"tail.pf{q}.tornado.{mode}.steady",
+               make_workload(fp, 0.2, CYCLES, seed=0))
+
+    # mid-run failure transient: re-routed tables, doomed packets dropped
+    rng = np.random.default_rng(0)
+    el = pf.graph.edge_list
+    g2 = pf.graph.subgraph_without_edges(
+        el[rng.choice(len(el), 3, replace=False)])
+    rt2 = build_routing(g2)
+    wl = build_failure_workload(rt, rt2, pat, "ugal", 0.4, CYCLES, FAIL_AT,
+                                k_candidates=8, seed=0)
+    simulate_packets(wl)
+    res, us = timed(lambda: simulate_packets(wl))
+    assert res.num_dropped > 0
+    _tail_row(f"tail.pf{q}.uniform.ugal.failure", us, wl, res)
+
+    # two-engine speedup on a short steady run (reference is the spec,
+    # not a contender -- this row just keeps the gap measured)
+    fp = build_flow_paths(rt, pat, "min", k_candidates=8, seed=0)
+    wls = make_workload(fp, 0.4, 200, seed=1)
+    simulate_packets(wls)
+    r_b, us_b = timed(lambda: simulate_packets(wls))
+    r_r, us_r = timed(lambda: simulate_packets_reference(wls, check=False))
+    assert (r_r.latencies() == r_b.latencies()).all()
+    emit(f"tail.pf{q}.engine.speedup", us_b,
+         f"speedup={us_r / us_b:.1f}x;P={wls.num_packets}")
+
+    if large() and not smoke():
+        _run_large()
+
+
+def _run_large():
+    """PF(79) sampled-flow point (6321 routers, ~505k directed links)
+    through the blocked routing stack -- the scale tier."""
+    g = build_polarfly(79).graph
+    rt = build_blocked_routing(g)
+    pat = make_pattern("uniform", rt, p=8, seed=0, max_flows=60_000)
+    fp = build_flow_paths(rt, pat, "ugal_pf", k_candidates=8, seed=0)
+    wl = make_workload(fp, 0.3, 400, seed=0, flow_sample=8_000,
+                       max_packets=1_500_000)
+    _point("tail.pf79.uniform.ugal_pf.steady", wl)
+
+
+if __name__ == "__main__":
+    run()

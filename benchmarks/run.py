@@ -35,6 +35,7 @@ BENCHES = [
     "bench_fig11_expansion",
     "bench_fig12_bisection",
     "bench_fig14_resilience",
+    "bench_fig_tail",
     "bench_fig15_cost",
     "bench_fabric",
     "bench_kernels",
@@ -94,6 +95,19 @@ def _certifications(rows) -> dict:
     return out
 
 
+def _tails(rows) -> dict:
+    """Packet-engine tail rows (those carrying a `p99=` field): the
+    latency percentiles plus delivery/drop counts, so tail regressions
+    diff across commits like the saturations do."""
+    out = {}
+    for row in rows:
+        kv = _kv(row["derived"])
+        if "p99" in kv:
+            out[row["name"]] = _floats(
+                kv, ("p50", "p99", "p999", "delivered", "dropped", "P"))
+    return out
+
+
 def _truncations(rows) -> dict:
     """{row name: float} for rows carrying a `trunc=<x>` field (the
     adaptive-mode Frank-Wolfe truncation-error estimate at the reported
@@ -138,6 +152,7 @@ def write_report(figures: dict, path: str) -> None:
         "saturations": _saturations(rows),
         "certifications": _certifications(rows),
         "truncation_err": _truncations(rows),
+        "tails": _tails(rows),
     }
     with open(path, "w", encoding="utf-8") as fh:
         json.dump(report, fh, indent=2, sort_keys=True)

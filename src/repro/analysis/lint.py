@@ -29,8 +29,10 @@ from .rules import ALL_RULES, RULES_BY_ID, FileContext
 _SIM_PATH_MODULES = (
     "src/repro/core/routing.py",
     "src/repro/core/metrics.py",
+    "src/repro/core/stepping.py",
     "src/repro/simulation/paths.py",
     "src/repro/simulation/fluid.py",
+    "src/repro/simulation/packet.py",
     "src/repro/parallel/blockwise.py",
 )
 DEFAULT_SCOPE: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {

@@ -83,6 +83,7 @@ import numpy as np
 
 from .graph import Graph, UNREACHABLE
 from .polarfly import PolarFly
+from .stepping import walk_next_hops
 from ..parallel.blockwise import (DEFAULT_BUDGET_BYTES, available_devices,
                                   block_size_for_budget, peak_bytes,
                                   plan_blocks, run_blocks)
@@ -712,28 +713,12 @@ def minimal_paths(next_hop: np.ndarray, src: np.ndarray, dst: np.ndarray,
     absorbs, so the remaining columns repeat dst[i] (callers recover hop
     validity as `nodes[:, h] != nodes[:, h + 1]`).  Raises ValueError on any
     unreachable pair.  The whole walk is `diameter` vectorized gathers -- no
-    per-flow Python loop.
+    per-flow Python loop; the gather loop itself is the shared stepping core
+    (`repro.core.stepping.walk_next_hops`), closed over the dense table here
+    and over next-hop columns in the blocked path builder.
     """
-    src = np.asarray(src, dtype=np.int64).ravel()
     dst = np.asarray(dst, dtype=np.int64).ravel()
-    if src.shape != dst.shape:
-        raise ValueError("src/dst shape mismatch")
-    f = src.shape[0]
-    nodes = np.empty((f, diameter + 1), dtype=np.int32)
-    nodes[:, 0] = src
-    cur = src
-    for h in range(diameter):
-        nxt = next_hop[cur, dst].astype(np.int64)
-        if (nxt == UNREACHABLE).any():
-            i = int(np.flatnonzero(nxt == UNREACHABLE)[0])
-            raise ValueError(f"no route {int(src[i])}->{int(dst[i])}")
-        nodes[:, h + 1] = nxt
-        cur = nxt
-    if (cur != dst).any():
-        i = int(np.flatnonzero(cur != dst)[0])
-        raise ValueError(
-            f"path {int(src[i])}->{int(dst[i])} exceeds diameter {diameter}")
-    return nodes
+    return walk_next_hops(lambda cur: next_hop[cur, dst], src, dst, diameter)
 
 
 def minimal_path(next_hop: np.ndarray, s: int, d: int) -> List[int]:

@@ -7,3 +7,8 @@ from .paths import (FlowPaths, build_flow_paths,  # noqa: F401
 from .fluid import (FluidResult, SaturationResult, Certificate,  # noqa: F401
                     CertifiedResult, evaluate_load, saturation_throughput,
                     truncation_error, latency_curve)
+from .packet import (BurstSchedule, PacketWorkload,  # noqa: F401
+                     PacketResult, make_workload, build_failure_workload,
+                     simulate_packets, simulate_packets_reference,
+                     simulate_packets_batch, packet_peak_bytes,
+                     tail_percentiles)

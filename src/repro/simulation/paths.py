@@ -50,9 +50,11 @@ from typing import Dict, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.graph import Graph, UNREACHABLE
+from ..core.graph import Graph
 from ..core.routing import (RoutingTables, dest_block_peak_bytes,
                             minimal_path, minimal_paths)
+from ..core.stepping import (edge_walk, successor_tables, walk_next_hops,
+                             walk_successors)
 from ..parallel.blockwise import (DEFAULT_BUDGET_BYTES, block_size_for_budget,
                                   peak_bytes, plan_blocks, run_blocks)
 from .traffic import TrafficPattern
@@ -324,10 +326,7 @@ def _batched_path_edges(rt: RoutingTables, de: DirectedEdges,
     """Minimal paths for F (src, dst) pairs -> ([F, diameter] edge ids, -1
     padded; [F] hop counts)."""
     nodes = minimal_paths(rt.next_hop, src, dst, rt.diameter)  # [F, D+1]
-    u, v = nodes[:, :-1], nodes[:, 1:]
-    real = u != v
-    edges = np.where(real, de.edge_ids(u, v), np.int32(-1))
-    return edges.astype(np.int32), real.sum(axis=1).astype(np.int32)
+    return edge_walk(de.edge_ids, nodes)
 
 
 def _stitch(seg1_e, h1, seg2_e, lmax: int) -> np.ndarray:
@@ -430,30 +429,14 @@ def _ecmp_walk_block(dist_cols: np.ndarray, nb: np.ndarray,
     """One destination block of the ECMP walk.
 
     `dist_cols` is the block's [n, B] distance columns (a dense-table slice
-    or a blocked-BFS product -- bit-identical either way); builds
-    succ[u, d_local, j] = j-th neighbor of u on a shortest path toward
-    destination d_local (CSR neighbor order preserved) plus matching counts,
-    then walks the block's flows with plain table gathers.  Returns
-    [Fb, k, diam] int64 node walks (source column excluded).
+    or a blocked-BFS product -- bit-identical either way).  Successor-table
+    construction and the hop-by-hop walk both live in the shared stepping
+    core (`repro.core.stepping`), which the packet engine consumes too;
+    this wrapper just binds the two calls.  Returns [Fb, k, diam] int64
+    node walks (source column excluded).
     """
-    dist_nb = dist_cols[safe_nb]  # [n, dmax, B]
-    good = (dist_nb.transpose(0, 2, 1)
-            == (dist_cols - np.int16(1))[:, :, None]) & present[:, None, :]
-    cnt_t = good.sum(axis=2).astype(np.int64)
-    order = np.argsort(~good, axis=2, kind="stable")  # good slots first
-    succ = np.take_along_axis(
-        np.broadcast_to(nb[:, None, :], good.shape), order, axis=2)
-    fb = len(src_f)
-    cur = np.broadcast_to(src_f[:, None], (fb, k)).copy().astype(np.int64)
-    d_b = np.broadcast_to(d_f[:, None], (fb, k))
-    l_b = np.broadcast_to(l_f[:, None], (fb, k))
-    walk = np.empty((fb, k, diam), dtype=np.int64)
-    for h in range(diam):
-        active = cur != d_b
-        j = np.floor(u_f[:, :, h] * cnt_t[cur, l_b]).astype(np.int64)
-        cur = np.where(active, succ[cur, l_b, j], cur).astype(np.int64)
-        walk[:, :, h] = cur
-    return walk
+    succ, cnt_t = successor_tables(dist_cols, nb, present, safe_nb)
+    return walk_successors(succ, cnt_t, src_f, d_f, l_f, u_f, k, diam)
 
 
 def _ecmp_nodes(rt: RoutingTables, de: DirectedEdges, src: np.ndarray,
@@ -523,11 +506,9 @@ def _build_vectorized(rt: RoutingTables, pattern: TrafficPattern, mode: str,
 
     if mode == "ecmp":
         nodes = _ecmp_nodes(rt, de, src, dst, draws["U"], k_total)
-        u, v = nodes[:, :, :-1], nodes[:, :, 1:]
-        real = u != v
-        e = np.where(real, de.edge_ids(u, v), np.int32(-1))
+        e, h = edge_walk(de.edge_ids, nodes)
         edges[:, :, :e.shape[2]] = e
-        hops[:, :] = real.sum(axis=2)
+        hops[:, :] = h
         valid[:, :] = True
         is_min[:, :] = True
     elif alt_kind == "valiant":
@@ -571,27 +552,11 @@ def _walk_edges_block(de: DirectedEdges, nh_cols: np.ndarray,
     srcs[i] toward dsts[i] using the destination's next-hop *column*
     nh_cols[:, ld[i]].  Returns ([R, diameter] edge ids, -1 padded; [R] hop
     counts); raises ValueError on unreachable pairs / diameter overruns with
-    the same messages as `minimal_paths`."""
-    r = len(srcs)
-    nodes = np.empty((r, diameter + 1), dtype=np.int32)
-    nodes[:, 0] = srcs
-    cur = np.asarray(srcs, dtype=np.int64)
-    for h in range(diameter):
-        nxt = nh_cols[cur, ld].astype(np.int64)
-        if (nxt == UNREACHABLE).any():
-            i = int(np.flatnonzero(nxt == UNREACHABLE)[0])
-            raise ValueError(f"no route {int(srcs[i])}->{int(dsts[i])}")
-        nodes[:, h + 1] = nxt
-        cur = nxt
-    if (cur != dsts).any():
-        i = int(np.flatnonzero(cur != dsts)[0])
-        raise ValueError(
-            f"path {int(srcs[i])}->{int(dsts[i])} exceeds diameter "
-            f"{diameter}")
-    u, v = nodes[:, :-1], nodes[:, 1:]
-    real = u != v
-    edges = np.where(real, de.edge_ids(u, v), np.int32(-1))
-    return edges.astype(np.int32), real.sum(axis=1).astype(np.int32)
+    the same messages as `minimal_paths` (both ride
+    `repro.core.stepping.walk_next_hops`)."""
+    nodes = walk_next_hops(lambda cur: nh_cols[cur, ld], srcs, dsts,
+                           diameter)
+    return edge_walk(de.edge_ids, nodes)
 
 
 def _cvaliant_select_block(nh_cols: np.ndarray, nb: np.ndarray,
@@ -732,11 +697,9 @@ def _build_blocked(rt, pattern: TrafficPattern, mode: str,
             nodes = np.concatenate(
                 [np.broadcast_to(s_f[:, None, None], (fb, k_total, 1)),
                  walk], axis=2)
-            u, v = nodes[:, :, :-1], nodes[:, :, 1:]
-            real = u != v
-            e = np.where(real, de.edge_ids(u, v), np.int32(-1))
+            e, h = edge_walk(de.edge_ids, nodes)
             edges[fsel, :, :e.shape[2]] = e
-            hops[fsel] = real.sum(axis=2)
+            hops[fsel] = h
             valid[fsel] = True
             is_min[fsel] = True
         elif alt_kind == "cvaliant":

@@ -56,7 +56,8 @@ def _hosts(g: Graph, hosts: Optional[np.ndarray]) -> np.ndarray:
 
 
 def uniform(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None,
-            max_flows: int = 120_000, seed: int = 0) -> TrafficPattern:
+            max_flows: int = 120_000, seed: int = 0,
+            rng: Optional[np.random.Generator] = None) -> TrafficPattern:
     """Uniform random traffic; exact all-pairs when it fits in max_flows,
     else a uniform sample of pairs carrying the same aggregate demand."""
     h = _hosts(g, hosts)
@@ -68,7 +69,8 @@ def uniform(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None,
         dst = h[d[mask]]
         demand = np.full(len(src), p / (nh - 1), dtype=np.float32)
     else:
-        rng = np.random.default_rng(seed)
+        if rng is None:
+            rng = np.random.default_rng(seed)
         f = max_flows
         si = rng.integers(nh, size=f)
         di = (si + 1 + rng.integers(nh - 1, size=f)) % nh
@@ -100,19 +102,24 @@ def tornado(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None) -> Traffi
 
 
 def random_permutation(g: Graph, p: int = 16, hosts: Optional[np.ndarray] = None,
-                       seed: int = 0) -> TrafficPattern:
+                       seed: int = 0,
+                       rng: Optional[np.random.Generator] = None
+                       ) -> TrafficPattern:
     h = _hosts(g, hosts)
-    rng = np.random.default_rng(seed)
+    if rng is None:
+        rng = np.random.default_rng(seed)
     return _perm_pattern("random_perm", h, rng.permutation(len(h)), p)
 
 
 def perm_khop(rt: RoutingTables, k: int, p: int = 16,
-              hosts: Optional[np.ndarray] = None, seed: int = 0) -> TrafficPattern:
+              hosts: Optional[np.ndarray] = None, seed: int = 0,
+              rng: Optional[np.random.Generator] = None) -> TrafficPattern:
     """PermKHop (§VIII-A(4)): a permutation whose destinations are at distance
     exactly k; found by bipartite matching (Kuhn) on the distance-k graph."""
     h = _hosts(rt.graph, hosts)
     nh = len(h)
-    rng = np.random.default_rng(seed)
+    if rng is None:
+        rng = np.random.default_rng(seed)
     if getattr(rt, "dist", None) is None:
         raise ValueError(
             "perm_khop needs dense distances (build_routing); BlockedRouting "
@@ -169,16 +176,24 @@ PATTERNS = ("uniform", "tornado", "random_perm", "perm1hop", "perm2hop")
 
 def make_pattern(name: str, rt: RoutingTables, p: int = 16,
                  hosts: Optional[np.ndarray] = None, seed: int = 0,
-                 max_flows: int = 120_000) -> TrafficPattern:
+                 max_flows: int = 120_000,
+                 rng: Optional[np.random.Generator] = None
+                 ) -> TrafficPattern:
+    """Build a named pattern.  All randomness flows through one generator:
+    pass `rng` to share a stream across pattern + workload construction,
+    or rely on `seed` -- every builder resolves
+    ``np.random.default_rng(seed)`` exactly once, so equal seeds give
+    identical `TrafficPattern`s (and, downstream, identical packet-engine
+    tail metrics -- see tests/test_packet_engine.py)."""
     g = rt.graph
     if name == "uniform":
-        return uniform(g, p, hosts, max_flows=max_flows, seed=seed)
+        return uniform(g, p, hosts, max_flows=max_flows, seed=seed, rng=rng)
     if name == "tornado":
         return tornado(g, p, hosts)
     if name == "random_perm":
-        return random_permutation(g, p, hosts, seed=seed)
+        return random_permutation(g, p, hosts, seed=seed, rng=rng)
     if name == "perm1hop":
-        return perm_khop(rt, 1, p, hosts, seed=seed)
+        return perm_khop(rt, 1, p, hosts, seed=seed, rng=rng)
     if name == "perm2hop":
-        return perm_khop(rt, 2, p, hosts, seed=seed)
+        return perm_khop(rt, 2, p, hosts, seed=seed, rng=rng)
     raise ValueError(f"unknown pattern {name!r}")

@@ -4,9 +4,9 @@ The pinned test container ships without `hypothesis` (it's an optional
 `[test]` extra, see pyproject.toml).  When the real package is available we
 re-export it untouched; otherwise a minimal seeded-random shim runs each
 `@given` test `max_examples` times with independently drawn inputs.  The shim
-covers only what this suite uses: `integers`, `sampled_from`, `lists`,
-`data`, `@settings(max_examples=..., deadline=...)`.  No shrinking, no
-database -- failures print the drawn values instead.
+covers only what this suite uses: `integers`, `floats`, `booleans`,
+`sampled_from`, `lists`, `data`, `@settings(max_examples=..., deadline=...)`.
+No shrinking, no database -- failures print the drawn values instead.
 """
 
 from __future__ import annotations
@@ -56,6 +56,21 @@ except ImportError:
             return _Strategy(
                 lambda rng: int(rng.integers(min_value, max_value + 1)),
                 f"integers({min_value},{max_value})")
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            # bounded uniform draw; the real package's allow_nan /
+            # allow_infinity / width knobs are irrelevant for bounded
+            # ranges, which is all this suite requests
+            span = max_value - min_value
+            return _Strategy(
+                lambda rng: float(min_value + span * rng.random()),
+                f"floats({min_value},{max_value})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)),
+                             "booleans()")
 
         @staticmethod
         def sampled_from(elements):

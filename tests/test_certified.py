@@ -161,3 +161,29 @@ def test_certificate_is_exported():
     assert Certificate.__name__ == "Certificate"
     assert {"gap", "util_lb", "util_ub", "util_err_bound", "kind"} <= set(
         Certificate.__dataclass_fields__)
+
+
+# ---------------------------------------------------------------------------
+# near-boundary bracket regression (ROADMAP open item, pinned)
+# ---------------------------------------------------------------------------
+
+def test_near_boundary_bracket_pinned_at_default_budget():
+    """Near-boundary saturation probes exhaust the default `cert_iters`
+    budget before deciding, so the certified bracket stays wider than the
+    bisection tolerance (ROADMAP open item).  Pin the bracket at the
+    default budget -- currently [0.25, 0.5] for the PF(13) random-perm
+    UGAL probe -- so future infeasibility-certificate tightening is
+    measured, not anecdotal: the bracket must never drift more than one
+    bisection grid step looser, and must keep bracketing the batched
+    saturation value."""
+    fp = _fp("ugal")
+    tol = 0.05
+    res = saturation_throughput(fp, tol=tol, certify=True)
+    sat = saturation_throughput(fp, tol=tol)
+    assert res.sat_lo >= 0.25 - tol / 2
+    assert res.sat_hi <= 0.5 + tol / 2
+    assert res.sat_lo <= sat <= res.sat_hi
+    # the mid-band is still undecided at the default budget; when an
+    # adaptive per-probe budget or a sharper infeasibility certificate
+    # closes it, this assertion (and the ROADMAP item) should go
+    assert res.sat_hi - res.sat_lo >= tol
