@@ -21,7 +21,8 @@ from repro.core.polarfly import build_polarfly
 from repro.core.routing import build_blocked_routing, build_routing
 from repro.simulation import (BurstSchedule, build_failure_workload,
                               build_flow_paths, make_pattern, make_workload,
-                              simulate_packets, simulate_packets_reference)
+                              record_occupancy, simulate_packets,
+                              simulate_packets_reference)
 
 from .common import emit, large, smoke, timed
 
@@ -32,10 +33,14 @@ FAIL_AT = 250
 def _tail_row(name: str, us: float, wl, res) -> None:
     t = res.tails()
     assert t["p50"] <= t["p99"] <= t["p999"]
+    # queue-depth histogram + occupancy gauges into the active recorder
+    # (benchmarks.run lifts them into the per-figure trace/obs table)
+    occ = record_occupancy(res, name=name)
     emit(name, us,
          f"p50={t['p50']};p99={t['p99']};p999={t['p999']};"
          f"delivered={res.num_delivered};dropped={res.num_dropped};"
-         f"P={wl.num_packets}")
+         f"P={wl.num_packets};occ_p99={occ['occ_p99']:.1f};"
+         f"sat_frac={occ['saturated_frac']:.4f}")
 
 
 def _point(tag: str, wl) -> None:

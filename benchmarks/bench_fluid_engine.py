@@ -55,6 +55,49 @@ def _certified_point(tag: str, fp, tol: float, check: bool,
             f"certified {us_c:.0f}us not faster than {us_ref:.0f}us reference"
 
 
+def _obs_noop_overhead():
+    """Acceptance bar for the obs layer: with the default NullRecorder
+    installed, the public `saturation_throughput` must cost within 2% of
+    dispatching the underlying jitted bisection directly (the
+    uninstrumented baseline).  PF(7) keeps the device work small enough
+    that any per-call host overhead from the span plumbing would show;
+    min-of-N wall clocks on both sides squeeze out scheduler noise."""
+    import numpy as np
+
+    from repro.simulation.fluid import _probe_schedule, _saturation_batch
+
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("random_perm", rt, p=4, seed=0)
+    fp = build_flow_paths(rt, pat, "ugal", k_candidates=8, seed=0)
+    probes = max(1, int(np.ceil(np.log2(1.0 / TOL))))
+    sched = _probe_schedule(ITERS, probes)
+    eidx, loads_rep, valid, is_min, first_edge, demand, _ = fp.device_arrays()
+
+    def raw():
+        return float(_saturation_batch(
+            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
+            demand, fp.num_links, fp.mode, ITERS, sched))
+
+    def pub():
+        return saturation_throughput(fp, tol=TOL, iters=ITERS,
+                                     engine="batched")
+
+    assert raw() == pub()  # compile both; identical jit underneath
+    # interleave the A/B pairs so machine-load drift hits both sides
+    # equally; min-of-N on each side then cancels transient contention
+    reps = 7
+    pairs = [(timed(raw)[1], timed(pub)[1]) for _ in range(reps)]
+    us_raw = min(r for r, _ in pairs)
+    us_pub = min(p for _, p in pairs)
+    ratio = us_pub / us_raw
+    emit("fluid.pf7.obs_noop_overhead", us_pub,
+         f"baseline_us={us_raw:.1f};ratio={ratio:.3f}x")
+    assert us_pub <= 1.02 * us_raw, \
+        f"no-op recorder path {us_pub:.1f}us vs raw {us_raw:.1f}us " \
+        f"({ratio:.3f}x > 1.02x)"
+
+
 def _run_large():
     """PF(79) adaptive point (6321 routers) through the blocked stack:
     the certified engine must keep its win at the scale tier."""
@@ -118,6 +161,7 @@ def run():
     fp = build_flow_paths(rt, pat, "ugal", k_candidates=8, seed=0)
     _certified_point(f"fluid.pf{q}.random_perm.ugal", fp, TOL,
                      check=not smoke())
+    _obs_noop_overhead()
     if large() and not smoke():
         _run_large()
 

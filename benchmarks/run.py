@@ -7,11 +7,18 @@ The JSON carries per-figure wall times, every emitted row, and the
 measured saturation points extracted from `sat=` derived values, so runs
 can be diffed across commits without re-parsing stdout.
 
-When `benchmarks/baselines/BENCH_<TIER>.json` exists (the SMOKE baseline
-is committed), the run is diffed against it: any figure whose wall time
-regressed more than 25% prints a `# WARN` line.  Warnings never fail the
-run -- wall times on shared CI runners are noisy -- but they make a
-regression visible in the job log the moment it lands.
+When `benchmarks/baselines/BENCH_<TIER>.json` exists (the SMOKE and FULL
+baselines are committed), the run is diffed against it: any figure whose
+wall time regressed more than 25% prints a `# WARN` line.  LARGE runs,
+which have no baseline of their own, additionally diff individual rows
+against the FULL baseline by name.  Warnings never fail the run -- wall
+times on shared CI runners are noisy -- but they make a regression
+visible in the job log the moment it lands.
+
+Each figure also runs under a fresh `repro.obs.Recorder`: the
+instrumented library paths emit spans/counters into it, a Chrome-trace
+JSONL per figure lands under `<out_dir>/bench_traces/`, and the
+aggregated summaries go into the report's `obs` table.
 """
 import importlib
 import json
@@ -21,6 +28,7 @@ import time
 import traceback
 
 from benchmarks import common
+from repro.obs import Recorder, recording
 
 BENCHES = [
     "bench_fig1_feasible_degrees",
@@ -120,6 +128,45 @@ def _truncations(rows) -> dict:
     return out
 
 
+# Row-level diffs (LARGE vs the committed FULL baseline) skip rows whose
+# baseline cost is below this floor: sub-millisecond rows are dominated by
+# dispatch noise and would WARN spuriously at any ratio.
+ROW_FLOOR_US = 1000.0
+
+
+def diff_rows_against_full(figures: dict,
+                           baseline_dir: str = BASELINE_DIR) -> list:
+    """`# WARN` lines for individual rows whose us_per_call regressed more
+    than `REGRESSION_RATIO` against the committed FULL baseline.
+
+    LARGE runs have no committed baseline of their own (they are too slow
+    to regenerate on every commit), but most of their rows -- everything
+    except the extra large-scale points -- are the same measurements the
+    FULL tier makes, so those are diffed row-by-row against
+    `baselines/BENCH_FULL.json`.  Rows only the LARGE tier emits have no
+    baseline entry and are skipped, as are rows under `ROW_FLOOR_US`.
+    """
+    path = os.path.join(baseline_dir, "BENCH_FULL.json")
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        base = json.load(fh).get("figures", {})
+    base_rows = {r["name"]: r["us_per_call"]
+                 for fig in base.values() for r in fig.get("rows", [])}
+    warns = []
+    for name in sorted(figures):
+        for row in figures[name]["rows"]:
+            ref = base_rows.get(row["name"], 0.0)
+            if ref >= ROW_FLOOR_US and \
+                    row["us_per_call"] > REGRESSION_RATIO * ref:
+                warns.append(
+                    f"# WARN {row['name']}: {row['us_per_call']:.1f}us vs "
+                    f"FULL baseline {ref:.1f}us "
+                    f"({row['us_per_call'] / ref:.2f}x > "
+                    f"{REGRESSION_RATIO:.2f}x)")
+    return warns
+
+
 def diff_against_baseline(figures: dict, tier: str,
                           baseline_dir: str = BASELINE_DIR) -> list:
     """`# WARN` lines for figures whose wall time regressed more than
@@ -143,7 +190,7 @@ def diff_against_baseline(figures: dict, tier: str,
     return warns
 
 
-def write_report(figures: dict, path: str) -> None:
+def write_report(figures: dict, path: str, obs: dict = None) -> None:
     rows = [r for fig in figures.values() for r in fig["rows"]]
     report = {
         "tier": common.tier(),
@@ -154,6 +201,10 @@ def write_report(figures: dict, path: str) -> None:
         "truncation_err": _truncations(rows),
         "tails": _tails(rows),
     }
+    if obs is not None:
+        # per-figure Recorder summaries (span totals, counters, gauges)
+        # from the instrumented solver/executor/packet paths
+        report["obs"] = obs
     with open(path, "w", encoding="utf-8") as fh:
         json.dump(report, fh, indent=2, sort_keys=True)
         fh.write("\n")
@@ -165,12 +216,22 @@ def main() -> None:  # reprolint: allow[naked-clock] -- times whole bench module
     failures = 0
     only = sys.argv[1:] or None
     figures = {}
+    obs = {}
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    traces_dir = os.path.join(out_dir, "bench_traces")
+    os.makedirs(traces_dir, exist_ok=True)
     for mod in BENCHES:
         if only and not any(o in mod for o in only):
             continue
+        rec = Recorder()
         t0 = time.perf_counter()
         try:
-            importlib.import_module(f"benchmarks.{mod}").run()
+            # a fresh Recorder per figure: the instrumented library paths
+            # (fluid solver spans, blockwise per-block spans, packet
+            # occupancy metrics) report into it for the module's duration
+            with recording(rec):
+                with rec.span("bench.figure", figure=mod):
+                    importlib.import_module(f"benchmarks.{mod}").run()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{mod},0,ERROR", flush=True)
@@ -179,11 +240,17 @@ def main() -> None:  # reprolint: allow[naked-clock] -- times whole bench module
             continue
         figures[mod] = {"wall_s": round(time.perf_counter() - t0, 3),
                         "rows": common.drain_rows()}
-    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+        rec.dump(os.path.join(traces_dir, f"{mod}.trace.jsonl"))
+        obs[mod] = rec.summary()
     write_report(figures, os.path.join(out_dir,
-                                       f"BENCH_{common.tier()}.json"))
+                                       f"BENCH_{common.tier()}.json"),
+                 obs=obs)
+    print(f"# traces under {traces_dir}", flush=True)
     for warn in diff_against_baseline(figures, common.tier()):
         print(warn, flush=True)
+    if common.tier() == "LARGE":
+        for warn in diff_rows_against_full(figures):
+            print(warn, flush=True)
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

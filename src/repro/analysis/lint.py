@@ -48,8 +48,11 @@ DEFAULT_SCOPE: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
                     ()),
     # jit bodies can appear anywhere (kernels, solver, launch)
     "host-sync": (("*",), ()),
-    # benchmark timing discipline
-    "naked-clock": (("benchmarks/*.py",), ()),
+    # benchmark timing discipline; repro.obs is in scope too -- its
+    # Recorder is a timing layer, so every clock read there must either
+    # sit inside `timed` or carry the one documented recorder-internal
+    # pragma (host-sync already covers obs via the "*" include above)
+    "naked-clock": (("benchmarks/*.py", "src/repro/obs/*.py"), ()),
     # the two files that OWN the version guards are the only exceptions --
     # blockwise.py stays in scope: it reaches shard_map strictly through
     # the compat shim (`from .compat import shard_map`)

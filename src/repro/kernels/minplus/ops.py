@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs.profiler import named_scope
 from .kernel import minplus_pallas, path_costs_pallas
 from .ref import adjacency_to_dist0, minplus_ref, path_costs_ref, INF
 
@@ -30,10 +31,14 @@ def path_costs(delay: jnp.ndarray, eidx: jnp.ndarray,
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
-    if use_pallas:
-        return path_costs_pallas(delay, eidx, bf=block,
-                                 interpret=not _on_tpu())
-    return path_costs_ref(delay, eidx)
+    # label the reduction in XLA profiles: this op runs inside every
+    # Frank-Wolfe step, and the scope name makes it findable in a
+    # jax.profiler capture (no-op shim when the profiler is unavailable)
+    with named_scope("minplus.path_costs"):
+        if use_pallas:
+            return path_costs_pallas(delay, eidx, bf=block,
+                                     interpret=not _on_tpu())
+        return path_costs_ref(delay, eidx)
 
 
 def minplus(a: jnp.ndarray, b: jnp.ndarray, use_pallas: bool = True,

@@ -1,0 +1,31 @@
+"""repro.obs — structured tracing + metrics for the repro stack.
+
+Spans/counters/gauges with explicit device-sync boundaries, a Recorder
+emitting Chrome-trace-event JSONL (Perfetto-loadable via ``python -m
+repro.obs.report --to-chrome``), convergence traces from the fluid
+solver, and guarded jax.profiler annotations.  Dependency-free: jax is
+only touched lazily at sync/annotation points.
+"""
+
+from .profiler import named_scope, trace_annotation
+from .record import (
+    NullRecorder,
+    Recorder,
+    Span,
+    get_recorder,
+    recording,
+    set_recorder,
+)
+from .trace import ConvergenceTrace
+
+__all__ = [
+    "ConvergenceTrace",
+    "NullRecorder",
+    "Recorder",
+    "Span",
+    "get_recorder",
+    "named_scope",
+    "recording",
+    "set_recorder",
+    "trace_annotation",
+]

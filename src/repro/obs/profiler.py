@@ -1,0 +1,41 @@
+"""Optional jax.profiler annotations, guarded by the compat-shim pattern.
+
+Like ``parallel/compat.py``, this module never lets an import failure
+leak: when jax (or the profiler surface) is unavailable the annotations
+degrade to no-op context managers, so kernels and executors can label
+themselves unconditionally.
+
+- :func:`named_scope` labels ops *inside* jit-traced code: the scope
+  name shows up on the XLA ops it encloses (used by
+  ``kernels/minplus/ops.path_costs``).
+- :func:`trace_annotation` labels *host-side* intervals in a
+  ``jax.profiler`` capture (used around the blockwise sharded mapper
+  dispatch).
+"""
+
+from __future__ import annotations
+
+from contextlib import nullcontext
+from typing import Any
+
+__all__ = ["named_scope", "trace_annotation"]
+
+
+def named_scope(name: str) -> Any:
+    """XLA op-name scope; no-op context manager when jax is unavailable."""
+    try:
+        import jax
+
+        return jax.named_scope(name)
+    except Exception:
+        return nullcontext()
+
+
+def trace_annotation(name: str) -> Any:
+    """Host-interval annotation for jax.profiler captures; guarded no-op."""
+    try:
+        from jax.profiler import TraceAnnotation
+
+        return TraceAnnotation(name)
+    except Exception:
+        return nullcontext()

@@ -50,6 +50,10 @@ from typing import Callable, Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
+# repro.obs is stdlib-only, so these keep the no-jax-at-import property
+from ..obs.profiler import trace_annotation
+from ..obs.record import get_recorder
+
 __all__ = [
     "DEFAULT_BUDGET_BYTES",
     "BlockPlan",
@@ -94,11 +98,17 @@ class BlockPlan:
     backend runs `devices` blocks per round (padding the tail round by
     repeating its last block), so `devices` is the mesh width it targets
     -- the host backend ignores it.
+
+    `per_item_bytes` is informational: `plan_blocks` carries the byte
+    sizing through so `run_blocks` can report per-block working-set
+    bytes (`peak_bytes`) on its obs spans; 0 means unknown (plans built
+    directly from an explicit `block`).
     """
 
     total: int
     block: int
     devices: int = 1
+    per_item_bytes: int = 0
 
     def __post_init__(self):
         if self.total < 0 or self.block < 1 or self.devices < 1:
@@ -130,7 +140,8 @@ def plan_blocks(total: int, per_item_bytes: Optional[int] = None,
         if per_item_bytes is None:
             raise ValueError("plan_blocks needs per_item_bytes or block")
         block = block_size_for_budget(total, per_item_bytes, budget_bytes)
-    return BlockPlan(total=total, block=int(block), devices=int(devices))
+    return BlockPlan(total=total, block=int(block), devices=int(devices),
+                     per_item_bytes=int(per_item_bytes or 0))
 
 
 def available_devices() -> int:
@@ -197,6 +208,12 @@ def _mapped_fn(device_fn: Callable, devices: tuple) -> Callable:
     if hit is not None:
         _MAPPED_CACHE.move_to_end(key)
         return hit
+    # cache miss = a fresh shard_map wrapper = an XLA retrace on first
+    # call; surfaced as a counter so sweeps that accidentally rebuild
+    # their device_fn per call show up in the trace instead of just
+    # running mysteriously slow
+    get_recorder().counter("blockwise.retrace", 1,
+                           devices=len(devices))
 
     mesh = Mesh(np.asarray(devices), ("blocks",))
     spec = PartitionSpec("blocks")
@@ -233,8 +250,9 @@ def _run_sharded(items: np.ndarray, plan: BlockPlan,
                 blk = np.concatenate(
                     [blk, np.repeat(blk[-1:], plan.block - len(blk))])
             blocks.append(blk)
-        outs = mapped(jnp.asarray(np.stack(blocks)))
-        outs = tuple(np.asarray(o) for o in outs)  # one host sync per round
+        with trace_annotation("blockwise.round"):
+            outs = mapped(jnp.asarray(np.stack(blocks)))
+            outs = tuple(np.asarray(o) for o in outs)  # one host sync per round
         for j in range(min(ndev, plan.num_blocks - first)):
             lo, hi = plan.bounds(first + j)
             yield items[lo:hi], tuple(o[j, :hi - lo] for o in outs)
@@ -242,7 +260,9 @@ def _run_sharded(items: np.ndarray, plan: BlockPlan,
 
 def run_blocks(items: Sequence, plan: BlockPlan, host_fn: Callable,
                device_fn: Optional[Callable] = None,
-               backend: str = "auto") -> Iterator[Tuple[np.ndarray, tuple]]:
+               backend: str = "auto",
+               progress: Optional[Callable[[int, int], None]] = None,
+               ) -> Iterator[Tuple[np.ndarray, tuple]]:
     """Stream ``(items_blk, outputs)`` per block, in block order.
 
     `items` is the 1-D array being blocked (source ids, destination ids,
@@ -259,13 +279,33 @@ def run_blocks(items: Sequence, plan: BlockPlan, host_fn: Callable,
     than one device is actually visible, there is more than one block,
     and a `device_fn` exists; everything else falls back to the host
     loop, so single-device environments always take the reference path.
+
+    Every block is wrapped in a ``blockwise.block`` obs span recording
+    the resolved backend, block index, item count, and (when the plan
+    carries `per_item_bytes`) the block's working-set bytes.  The
+    sharded backend computes a whole round of `devices` blocks at its
+    first block's ``next()``, so that round's wall time lands on the
+    round's first span -- per-round attribution, not per-block.
+    `progress(done_blocks, num_blocks)` is called after each block is
+    produced (before it is yielded), e.g. for long streaming sweeps that
+    want a heartbeat without consuming the trace.
     """
     items = np.asarray(items)
     if plan.total != len(items):
         raise ValueError(f"plan.total={plan.total} != len(items)={len(items)}")
     if plan.total == 0:
         return
-    if _resolve_backend(backend, plan, device_fn) == "host":
-        yield from _run_host(items, plan, host_fn)
-    else:
-        yield from _run_sharded(items, plan, device_fn)
+    resolved = _resolve_backend(backend, plan, device_fn)
+    inner = (_run_host(items, plan, host_fn) if resolved == "host"
+             else _run_sharded(items, plan, device_fn))
+    rec = get_recorder()
+    nblocks = plan.num_blocks
+    for i in range(nblocks):
+        with rec.span("blockwise.block", backend=resolved, index=i) as sp:
+            blk, outs = next(inner)
+            sp.set(items=len(blk))
+            if plan.per_item_bytes:
+                sp.set(bytes=peak_bytes(len(blk), plan.per_item_bytes))
+        if progress is not None:
+            progress(i + 1, nblocks)
+        yield blk, outs

@@ -11,4 +11,5 @@ from .packet import (BurstSchedule, PacketWorkload,  # noqa: F401
                      PacketResult, make_workload, build_failure_workload,
                      simulate_packets, simulate_packets_reference,
                      simulate_packets_batch, packet_peak_bytes,
-                     tail_percentiles)
+                     tail_percentiles, occupancy_histogram,
+                     record_occupancy)

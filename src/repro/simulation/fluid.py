@@ -102,6 +102,8 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.minplus.ops import path_costs
+from ..obs.record import get_recorder
+from ..obs.trace import ConvergenceTrace
 from .paths import FlowPaths
 
 __all__ = ["FluidResult", "SaturationResult", "Certificate",
@@ -128,6 +130,10 @@ class FluidResult:
     max_util: float
     mean_latency: float  # cycles
     mean_hops: float
+    # convergence telemetry when the solve ran with trace=True (None
+    # otherwise); carried out of jit as fixed-size sample buffers and
+    # assembled host-side (repro.obs.trace.ConvergenceTrace)
+    trace: ConvergenceTrace = None
 
 
 @dataclass
@@ -146,6 +152,11 @@ class SaturationResult:
     """
     saturation: float
     truncation_err: float
+    # per-probe convergence telemetry when trace=True (None otherwise);
+    # truncation_err is NaN when trace=True was requested without
+    # return_info (the trace subsumes the heuristic, and the extra cold
+    # solve is not free)
+    trace: ConvergenceTrace = None
 
 
 @dataclass
@@ -204,6 +215,10 @@ class CertifiedResult:
     cert: Certificate
     sat_lo: float = float("nan")
     sat_hi: float = float("nan")
+    # per-stride convergence telemetry when trace=True (None otherwise);
+    # trace.final_gap equals cert.gap -- the trace's last sample is
+    # written from the same carried gap the certificate is built from
+    trace: ConvergenceTrace = None
 
 
 def _queue_delay(rho: jnp.ndarray) -> jnp.ndarray:
@@ -320,6 +335,7 @@ class _FWPieces(NamedTuple):
     target_of: Callable
     gap_of: Callable
     cert_equilibrate: Callable
+    equilibrate_traced: Callable
 
 
 def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
@@ -347,9 +363,14 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                         for the gap as well, so it computes cost once).
       gap_of(split, target, cost, demand) -> scalar Frank-Wolfe duality
                         gap sum_f demand_f * <split_f - target_f, cost_f>.
-      cert_equilibrate(split0, demand, max_iters, util_tol, t0, decide_at)
+      cert_equilibrate(split0, demand, max_iters, util_tol, t0, decide_at,
+                        trace_cap)
                         gap-driven conjugate line-search Frank-Wolfe; see
                         below.
+      equilibrate_traced(split0, demand, iters, t0)
+                        `equilibrate` returning per-iteration (gap,
+                        max_util, gamma) scan outputs alongside the split
+                        (see its docstring; trace=True's uncertified path).
 
     `dtype` pins the arithmetic precision of every closure (the uncertified
     engines always pass float32 -- explicitly, so enabling JAX_ENABLE_X64
@@ -367,8 +388,13 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
     `optimization_barrier`, so the vmapped batch solver cannot use them).
 
     `cert_equilibrate(split0, demand, max_iters, util_tol, t0=0.0,
-    decide_at=None)` returns `(split, rho, gap, mu_lb, mu_ub, iters,
-    converged)`.  It runs `_CERT_STRIDE`-step chunks inside a
+    decide_at=None, trace_cap=0)` returns `(split, rho, gap, mu_lb,
+    mu_ub, iters, converged, trace)`.  With `trace_cap > 0` (a static
+    bound: chunks + 1), `trace` is a tuple of fixed-size per-chunk sample
+    buffers `(iter, gap, max_util, mu_lb, mu_ub, gamma, count)` written
+    in-loop with `.at[idx].set` -- NaN-padded past `count`, trimmed
+    host-side into a `ConvergenceTrace`; `()` when tracing is off.
+    It runs `_CERT_STRIDE`-step chunks inside a
     lax.while_loop.  For mode="ugal" each step is conjugate Frank-Wolfe
     with an exact line search on the Beckmann potential (bisection on the
     monotone directional derivative <delta_rho, 1 + w(rho + gamma *
@@ -460,6 +486,36 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
             body, split0, t0 + jnp.arange(iters, dtype=dtype))
         return split
 
+    def equilibrate_traced(split0, demand, iters: int, t0: float = 0.0):
+        """`equilibrate` with per-iteration telemetry: returns (split,
+        (gap [iters], max_util [iters], gamma [iters])).  Same per-step
+        math (the target is computed from the same masked cost); the gap
+        is an extra O(F*K) reduction of the cost the step computes
+        anyway, so tracing costs a few percent, not a second solve.
+        Samples stay on device (scan ys) -- no host syncs inside jit.
+        Oblivious modes return their fixed point with one zero-gap
+        sample."""
+        if mode not in ("ugal", "ugal_pf"):
+            rho = loads(split0, demand)
+            mu = _max_util(rho, num_links).astype(dtype)
+            z = jnp.zeros((1,), dtype)
+            return split0, (z, mu[None], z)
+
+        def body(split, t):
+            rho = loads(split, demand)
+            cost = cost_of(rho)
+            target = target_of(split, rho, jnp.where(valid, cost, jnp.inf))
+            gap = gap_of(split, target, cost, demand)
+            gamma = 2.0 / (t + 2.0)
+            split = (1 - gamma) * split + gamma * target
+            return split, (gap.astype(dtype),
+                           _max_util(rho, num_links).astype(dtype),
+                           gamma.astype(dtype))
+
+        split, ys = jax.lax.scan(
+            body, split0, t0 + jnp.arange(iters, dtype=dtype))
+        return split, ys
+
     # exact line search on gamma in [0, 1]: a short bisection brackets the
     # root of the monotone derivative, then a few false-position (secant
     # within the bracket) steps polish it.  Every derivative evaluation is
@@ -513,12 +569,28 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         return jnp.where(d1 <= 0, one, interp(*carry))
 
     def cert_equilibrate(split0, demand, max_iters: int, util_tol,
-                         t0: float = 0.0, decide_at=None):
+                         t0: float = 0.0, decide_at=None,
+                         trace_cap: int = 0):
+        def trace_single(gap, rho, mu_lb, mu_ub):
+            # one-sample trace for runs that never enter the loop
+            if not trace_cap:
+                return ()
+            nan = jnp.full((trace_cap,), jnp.nan, dtype)
+            return (jnp.zeros((trace_cap,), jnp.int32),
+                    nan.at[0].set(gap.astype(dtype)),
+                    nan.at[0].set(_max_util(rho, num_links).astype(dtype)),
+                    nan.at[0].set(mu_lb.astype(dtype)),
+                    nan.at[0].set(mu_ub.astype(dtype)),
+                    nan.at[0].set(jnp.zeros((), dtype)),
+                    jnp.ones((), jnp.int32))
+
         rho0 = loads(split0, demand)
         if mode not in ("ugal", "ugal_pf"):
             mu0 = _max_util(rho0, num_links).astype(dtype)
-            return (split0, rho0, jnp.zeros((), dtype), mu0, mu0,
-                    jnp.zeros((), jnp.int32), jnp.ones((), bool))
+            z = jnp.zeros((), dtype)
+            return (split0, rho0, z, mu0, mu0,
+                    jnp.zeros((), jnp.int32), jnp.ones((), bool),
+                    trace_single(z, rho0, mu0, mu0))
 
         def residual(split, rho):
             cost = cost_of(rho)
@@ -532,7 +604,7 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
             # Beckmann Hessian in load space, then take an exact line-search
             # step -- vanilla FW's O(1/t) zigzag stalls the gap around 1 on
             # PF(13) at budgets where CFW is already at certification level
-            split, rho, sbar, rbar = carry
+            split, rho, sbar, rbar, _g = carry
             cost = cost_of(rho)
             target = target_of(split, rho, jnp.where(valid, cost, jnp.inf))
             rho_t = loads(target, demand)
@@ -553,7 +625,8 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
             gamma = _line_search(rho, r_comb - rho)
             # loads are linear in the split, so rho tracks incrementally
             return (split + gamma * (s_comb - split),
-                    rho + gamma * (r_comb - rho), s_comb, r_comb), None
+                    rho + gamma * (r_comb - rho), s_comb, r_comb,
+                    gamma.astype(dtype)), None
 
         def step_pf(carry, i):
             # UGAL_PF's gated target is not a linear-minimization oracle
@@ -561,12 +634,12 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
             # potential is meaningless: keep the harmonic schedule -- the
             # exact per-step math of the uncertified engines -- and let the
             # residual be the stopping/early-exit signal
-            split, rho, sbar, rbar = carry
+            split, rho, sbar, rbar, _g = carry
             target = fw_target(split, rho)
             gamma = 2.0 / (i + 2.0)
             return (split + gamma * (target - split),
                     rho + gamma * (loads(target, demand) - rho),
-                    sbar, rbar), None
+                    sbar, rbar, gamma.astype(dtype)), None
 
         step = step_ugal if mode == "ugal" else step_pf
 
@@ -587,35 +660,62 @@ def _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                 done = done | (mu_ub <= decide_at) | (mu_lb > decide_at)
             return mu_lb, mu_ub, done
 
+        def trace_init():
+            if not trace_cap:
+                return ()
+            nan = jnp.full((trace_cap,), jnp.nan, dtype)
+            return (jnp.zeros((trace_cap,), jnp.int32), nan, nan, nan, nan,
+                    nan, jnp.zeros((), jnp.int32))
+
+        def trace_rec(tr, t_next, gap, rho, mu_lb, mu_ub, glast):
+            # samples land in fixed-size buffers via .at[idx].set -- no
+            # host syncs, no dynamic shapes; the valid prefix length rides
+            # along as `cnt` and the host trims after the jit returns
+            if not trace_cap:
+                return tr
+            titer, tgap, tmu, tlb, tub, tgm, cnt = tr
+            idx = jnp.minimum(cnt, trace_cap - 1)
+            return (titer.at[idx].set(t_next),
+                    tgap.at[idx].set(gap.astype(dtype)),
+                    tmu.at[idx].set(_max_util(rho, num_links).astype(dtype)),
+                    tlb.at[idx].set(mu_lb.astype(dtype)),
+                    tub.at[idx].set(mu_ub.astype(dtype)),
+                    tgm.at[idx].set(glast.astype(dtype)),
+                    cnt + 1)
+
         def body(carry):
-            split, rho, sbar, rbar = carry[:4]
-            t = carry[6]
-            (split, rho, sbar, rbar), _ = jax.lax.scan(
-                step, (split, rho, sbar, rbar),
+            state, _gap, _brk, t, _done, tr = carry
+            state, _ = jax.lax.scan(
+                step, state,
                 t0 + t.astype(dtype) + jnp.arange(_CERT_STRIDE, dtype=dtype))
+            split, _rho_inc, sbar, rbar, glast = state
             rho = loads(split, demand)  # shed incremental-update rounding
             gap = residual(split, rho)
             mu_lb, mu_ub, done = done_of(gap, rho)
-            return (split, rho, sbar, rbar, gap, (mu_lb, mu_ub),
-                    t + _CERT_STRIDE, done)
+            tr = trace_rec(tr, t + _CERT_STRIDE, gap, rho, mu_lb, mu_ub,
+                           glast)
+            return ((split, rho, sbar, rbar, glast), gap, (mu_lb, mu_ub),
+                    t + _CERT_STRIDE, done, tr)
 
         def cond(carry):
-            return (~carry[7]) & (carry[6] < max_iters)
+            return (~carry[4]) & (carry[3] < max_iters)
 
         gap0 = residual(split0, rho0)
         lb0, ub0, done0 = done_of(gap0, rho0)
+        tr0 = trace_rec(trace_init(), jnp.zeros((), jnp.int32), gap0, rho0,
+                        lb0, ub0, jnp.zeros((), dtype))
         # sbar = split0 makes the first conjugate combination degenerate
         # (a = 0 -> beta guarded to 0), i.e. a plain FW first step
-        carry = (split0, rho0, split0, rho0, gap0, (lb0, ub0),
-                 jnp.zeros((), jnp.int32), done0)
+        carry = ((split0, rho0, split0, rho0, jnp.zeros((), dtype)),
+                 gap0, (lb0, ub0), jnp.zeros((), jnp.int32), done0, tr0)
         out = jax.lax.while_loop(cond, body, carry)
-        split, rho, gap, (mu_lb, mu_ub), t, done = (
-            out[0], out[1], out[4], out[5], out[6], out[7])
-        return split, rho, gap, mu_lb, mu_ub, t, done
+        (split, rho, _sb, _rb, _g), gap, (mu_lb, mu_ub), t, done, tr = out
+        return split, rho, gap, mu_lb, mu_ub, t, done, tr
 
     init = minvec if mode in ("min", "ugal", "ugal_pf") else uniform
     return _FWPieces(init, equilibrate, loads, cost_of, fw_target,
-                     target_of, gap_of, cert_equilibrate)
+                     target_of, gap_of, cert_equilibrate,
+                     equilibrate_traced)
 
 
 def _max_util(rho, num_links: int):
@@ -652,24 +752,47 @@ def _solve(eidx, loads_arrays, loads_kind, valid, is_min, first_edge, demand,
 
 @functools.partial(jax.jit,
                    static_argnames=("loads_kind", "num_links", "mode",
-                                    "iters"))
+                                    "iters", "trace"))
 def _solve_batch(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                  demand, hops, num_links: int, mode: str, offered_vec,
-                 iters: int = 250):
+                 iters: int = 250, trace: bool = False):
     """vmap of the cold-start equilibrium over a vector of offered loads;
-    one compiled call evaluates the whole latency sweep."""
+    one compiled call evaluates the whole latency sweep.  With
+    `trace=True` the metrics tuple also carries the per-iteration
+    (gap, max_util, gamma) scan outputs, batched over loads."""
     fw = _fw_pieces(
         eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
         num_links, mode, barrier=False)
 
     def one(offered):
         d = demand * offered
-        split = fw.equilibrate(fw.init, d, iters)
+        if trace:
+            split, ys = fw.equilibrate_traced(fw.init, d, iters)
+        else:
+            split = fw.equilibrate(fw.init, d, iters)
         rho = fw.loads(split, d)
-        return _metrics(split, rho, fw.cost_of(rho), valid, hops, demand,
-                        offered, num_links)
+        m = _metrics(split, rho, fw.cost_of(rho), valid, hops, demand,
+                     offered, num_links)
+        return m + (ys,) if trace else m
 
     return jax.vmap(one)(offered_vec)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
+                                    "iters"))
+def _solve_traced(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+                  demand, num_links: int, mode: str, offered: float,
+                  iters: int = 250):
+    """`_solve` with per-iteration telemetry: (split, rho, cost,
+    (gap, max_util, gamma))."""
+    fw = _fw_pieces(
+        eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+        num_links, mode)
+    demand = demand * offered
+    split, ys = fw.equilibrate_traced(fw.init, demand, iters)
+    rho = fw.loads(split, demand)
+    return split, rho, fw.cost_of(rho), ys
 
 
 def _probe_schedule(iters: int, probes: int) -> tuple:
@@ -722,6 +845,46 @@ def _saturation_batch(eidx, loads_arrays, loads_kind, valid, is_min,
 
 @functools.partial(jax.jit,
                    static_argnames=("loads_kind", "num_links", "mode",
+                                    "iters", "probe_schedule"))
+def _saturation_batch_traced(eidx, loads_arrays, loads_kind, valid, is_min,
+                             first_edge, demand, num_links: int, mode: str,
+                             iters: int, probe_schedule: tuple):
+    """`_saturation_batch` with per-iteration telemetry on every probe.
+
+    Same probe sequence and per-step math (each probe runs
+    `equilibrate_traced` instead of `equilibrate`); returns
+    (sat, traces, brackets) where `traces` is one (gap, max_util, gamma)
+    tuple per probe (probe lengths follow `probe_schedule`, so they stay
+    a Python tuple rather than a stacked array) and `brackets` is
+    [probes + 1, 4] rows (offered, feasible, lo, hi) after each probe.
+    """
+    fw = _fw_pieces(
+        eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
+        num_links, mode)
+    split, ys0 = fw.equilibrate_traced(fw.init, demand, iters)
+    max1 = _max_util(fw.loads(split, demand), num_links)
+
+    one = jnp.ones((), jnp.float32)
+    lo = jnp.zeros((), jnp.float32)
+    hi = one
+    yss = [ys0]
+    brs = [(one, (max1 <= 1.0).astype(jnp.float32), lo, hi)]
+    for probe_iters in probe_schedule:
+        mid = 0.5 * (lo + hi)
+        d = demand * mid
+        split, ys = fw.equilibrate_traced(split, d, probe_iters, t0=_WARM_T0)
+        feasible = _max_util(fw.loads(split, d), num_links) <= 1.0
+        lo = jnp.where(feasible, mid, lo)
+        hi = jnp.where(feasible, hi, mid)
+        yss.append(ys)
+        brs.append((mid, feasible.astype(jnp.float32), lo, hi))
+    sat = jnp.where(max1 <= 1.0, one, lo)
+    brackets = jnp.stack([jnp.stack(b) for b in brs])
+    return sat, tuple(yss), brackets
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("loads_kind", "num_links", "mode",
                                     "iters"))
 def _truncation_gap(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
                     demand, num_links: int, mode: str, offered, iters: int):
@@ -748,30 +911,32 @@ def _truncation_gap(eidx, loads_arrays, loads_kind, valid, is_min, first_edge,
 
 @functools.partial(jax.jit,
                    static_argnames=("loads_kind", "num_links", "mode",
-                                    "max_iters", "dtype"))
+                                    "max_iters", "dtype", "trace_cap"))
 def _certified_solve(eidx, loads_arrays, loads_kind, valid, is_min,
                      first_edge, demand, hops, num_links: int, mode: str,
-                     offered, util_tol, max_iters: int, dtype: str):
+                     offered, util_tol, max_iters: int, dtype: str,
+                     trace_cap: int = 0):
     """Single-load certified solve: metrics + (gap, mu_lb, mu_ub, iters,
-    converged)."""
+    converged, trace)."""
     dt = jnp.dtype(dtype)
     fw = _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min,
                     first_edge, num_links, mode, dtype=dt)
     dbase = demand.astype(dt)
     d = dbase * offered
-    split, rho, gap, mu_lb, mu_ub, iters, ok = fw.cert_equilibrate(
-        fw.init, d, max_iters, util_tol)
+    split, rho, gap, mu_lb, mu_ub, iters, ok, tr = fw.cert_equilibrate(
+        fw.init, d, max_iters, util_tol, trace_cap=trace_cap)
     metrics = _metrics(split, rho, fw.cost_of(rho), valid, hops, dbase,
                        offered, num_links)
-    return metrics + (gap, mu_lb, mu_ub, iters, ok)
+    return metrics + (gap, mu_lb, mu_ub, iters, ok, tr)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("loads_kind", "num_links", "mode",
-                                    "max_iters", "dtype"))
+                                    "max_iters", "dtype", "trace_cap"))
 def _certified_batch(eidx, loads_arrays, loads_kind, valid, is_min,
                      first_edge, demand, hops, num_links: int, mode: str,
-                     offered_vec, util_tol, max_iters: int, dtype: str):
+                     offered_vec, util_tol, max_iters: int, dtype: str,
+                     trace_cap: int = 0):
     """vmap of the certified equilibrium over a vector of offered loads
     (the certify=True latency sweep; barriers off as in `_solve_batch`)."""
     dt = jnp.dtype(dtype)
@@ -781,21 +946,23 @@ def _certified_batch(eidx, loads_arrays, loads_kind, valid, is_min,
 
     def one(offered):
         d = dbase * offered
-        split, rho, gap, mu_lb, mu_ub, iters, ok = fw.cert_equilibrate(
-            fw.init, d, max_iters, util_tol)
+        split, rho, gap, mu_lb, mu_ub, iters, ok, tr = fw.cert_equilibrate(
+            fw.init, d, max_iters, util_tol, trace_cap=trace_cap)
         m = _metrics(split, rho, fw.cost_of(rho), valid, hops, dbase,
                      offered, num_links)
-        return m + (gap, mu_lb, mu_ub, iters, ok)
+        return m + (gap, mu_lb, mu_ub, iters, ok, tr)
 
     return jax.vmap(one)(offered_vec)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("loads_kind", "num_links", "mode",
-                                    "max_iters", "probes", "dtype"))
+                                    "max_iters", "probes", "dtype",
+                                    "trace_cap"))
 def _certified_saturation(eidx, loads_arrays, loads_kind, valid, is_min,
                           first_edge, demand, num_links: int, mode: str,
-                          util_tol, max_iters: int, probes: int, dtype: str):
+                          util_tol, max_iters: int, probes: int, dtype: str,
+                          trace_cap: int = 0):
     """In-jit certified saturation bisection with gap early-exit probes.
 
     Probe sequence mirrors `_saturation_batch` (offered = 1.0 first, then
@@ -810,14 +977,20 @@ def _certified_saturation(eidx, loads_arrays, loads_kind, valid, is_min,
     ones.
 
     Returns (sat, lo_c, hi_c, gap, mu_lb, mu_ub, total_iters,
-    all_converged) with gap / bracket from the final probe.
+    all_converged, traces, brackets) with gap / bracket from the final
+    probe.  With `trace_cap > 0` the probes are traced: `traces` stacks
+    each probe's `cert_equilibrate` sample buffers along a leading
+    [probes + 1] axis (the probes are Python-unrolled, so stacking is
+    free) and `brackets` is [probes + 1, 4] rows (offered, feasible,
+    lo, hi) after each probe; both are `()` when tracing is off.
     """
     dt = jnp.dtype(dtype)
     fw = _fw_pieces(eidx, loads_arrays, loads_kind, valid, is_min,
                     first_edge, num_links, mode, dtype=dt)
     d1 = demand.astype(dt)
-    split, rho, gap, mu_lb, mu_ub, it, ok = fw.cert_equilibrate(
-        fw.init, d1, max_iters, util_tol, decide_at=1.0)
+    split, rho, gap, mu_lb, mu_ub, it, ok, tr = fw.cert_equilibrate(
+        fw.init, d1, max_iters, util_tol, decide_at=1.0,
+        trace_cap=trace_cap)
     mu1 = _max_util(rho, num_links)
     total = it
     all_ok = ok
@@ -826,11 +999,14 @@ def _certified_saturation(eidx, loads_arrays, loads_kind, valid, is_min,
     lo, hi = jnp.zeros((), dt), one
     lo_c = jnp.where(mu_ub <= 1.0, one, jnp.zeros((), dt))
     hi_c = one
+    trs = [tr]
+    brs = [(one, (mu1 <= 1.0).astype(dt), lo, hi)]
     for _ in range(probes):
         mid = 0.5 * (lo + hi)
         dd = d1 * mid
-        split, rho, gap, mu_lb, mu_ub, it, ok = fw.cert_equilibrate(
-            split, dd, max_iters, util_tol, t0=_WARM_T0, decide_at=1.0)
+        split, rho, gap, mu_lb, mu_ub, it, ok, tr = fw.cert_equilibrate(
+            split, dd, max_iters, util_tol, t0=_WARM_T0, decide_at=1.0,
+            trace_cap=trace_cap)
         feasible = _max_util(rho, num_links) <= 1.0
         lo = jnp.where(feasible, mid, lo)
         hi = jnp.where(feasible, hi, mid)
@@ -838,8 +1014,16 @@ def _certified_saturation(eidx, loads_arrays, loads_kind, valid, is_min,
         hi_c = jnp.where(mu_lb > 1.0, jnp.minimum(hi_c, mid), hi_c)
         total = total + it
         all_ok = all_ok & ok
+        trs.append(tr)
+        brs.append((mid, feasible.astype(dt), lo, hi))
     sat = jnp.where(mu1 <= 1.0, one, lo)
-    return sat, lo_c, hi_c, gap, mu_lb, mu_ub, total, all_ok
+    if trace_cap:
+        traces = tuple(jnp.stack(parts) for parts in zip(*trs))
+        brackets = jnp.stack([jnp.stack(b) for b in brs])
+    else:
+        traces, brackets = (), ()
+    return (sat, lo_c, hi_c, gap, mu_lb, mu_ub, total, all_ok,
+            traces, brackets)
 
 
 def _cert_params(mode: str, util_tol, dtype, iters: int, cert_iters):
@@ -876,6 +1060,61 @@ def _certificate(gap, mu_lb, mu_ub, iters, ok, util_tol, dtype, kind):
                        kind=kind)
 
 
+def _cert_trace(mode, kind, tr, brackets=None):
+    """Host-side `ConvergenceTrace` from `cert_equilibrate` buffers.
+
+    `tr` is one trace tuple (single solve) or the stacked [P+1, cap]
+    form from `_certified_saturation`; each probe's valid prefix is
+    trimmed by its `cnt` and the iteration axis is made cumulative
+    across probes.  Runs after the jit returns -- all syncs are here."""
+    titer, tgap, tmu, tlb, tub, tgm, cnt = (np.asarray(x) for x in tr)
+    if titer.ndim == 1:
+        titer, tgap, tmu, tlb, tub, tgm = (
+            a[None] for a in (titer, tgap, tmu, tlb, tub, tgm))
+        cnt = np.asarray([cnt])
+    rows = []
+    offset = 0
+    for p in range(titer.shape[0]):
+        n = int(cnt[p])
+        it = offset + titer[p, :n].astype(np.int64)
+        rows.append((np.full(n, p, np.int64), it, tgap[p, :n], tmu[p, :n],
+                     tlb[p, :n], tub[p, :n], tgm[p, :n]))
+        if n:
+            offset = int(it[-1])
+    probe, iters, gap, mu, lb, ub, gm = (
+        np.concatenate(cols) for cols in zip(*rows))
+    br = np.asarray(brackets, np.float64) if brackets is not None \
+        else np.zeros((0, 4))
+    return ConvergenceTrace(mode=mode, kind=kind, stride=_CERT_STRIDE,
+                            iters=iters, gap=gap, max_util=mu, util_lb=lb,
+                            util_ub=ub, step_size=gm, probe=probe,
+                            brackets=br)
+
+
+def _fw_trace(mode, yss, brackets=None):
+    """Host-side `ConvergenceTrace` from `equilibrate_traced` outputs
+    (one (gap, max_util, gamma) tuple per probe; stride-1 samples, NaN
+    certified bounds -- these runs carry no certificate)."""
+    rows = []
+    offset = 0
+    for p, ys in enumerate(yss):
+        gap, mu, gm = (np.asarray(a, np.float64) for a in ys)
+        n = gap.shape[0]
+        nan = np.full(n, np.nan)
+        rows.append((np.full(n, p, np.int64),
+                     offset + np.arange(n, dtype=np.int64),
+                     gap, mu, nan, nan, gm))
+        offset += n
+    probe, iters, gap, mu, lb, ub, gm = (
+        np.concatenate(cols) for cols in zip(*rows))
+    br = np.asarray(brackets, np.float64) if brackets is not None \
+        else np.zeros((0, 4))
+    return ConvergenceTrace(mode=mode, kind="uncertified", stride=1,
+                            iters=iters, gap=gap, max_util=mu, util_lb=lb,
+                            util_ub=ub, step_size=gm, probe=probe,
+                            brackets=br)
+
+
 def _as_flow_paths(fp) -> FlowPaths:
     """Normalize the `fp` argument of every public entry point: a single
     FlowPaths passes through; a sequence of chunks (e.g. assembled one
@@ -903,31 +1142,57 @@ def _run(fp: FlowPaths, offered: float, iters: int):
 
 def evaluate_load(fp, offered: float, iters: int = 250,
                   certify: bool = False, util_tol: float = None,
-                  dtype: str = None, cert_iters: int = None):
+                  dtype: str = None, cert_iters: int = None,
+                  trace: bool = False):
     """FluidResult at one offered load; with `certify=True`, a
     `CertifiedResult` wrapping the FluidResult whose certificate bounds the
     reported utilizations' distance from the exact equilibrium (gap-driven
     line-search Frank-Wolfe instead of a fixed `iters` budget; `cert_iters`
-    caps the certified run, default max(iters, 2000))."""
+    caps the certified run, default max(iters, 2000)).
+
+    With `trace=True` the result additionally carries a
+    `repro.obs.trace.ConvergenceTrace` in its `trace` field: per-stride
+    (certified) or per-iteration (uncertified) duality gap, step size
+    and max utilization, carried out of jit as returned arrays -- the
+    compiled solve stays sync-free."""
     fp = _as_flow_paths(fp)
+    rec = get_recorder()
     if certify:
         dtype, util_tol, max_iters, kind = _cert_params(
             fp.mode, util_tol, dtype, iters, cert_iters)
+        trace_cap = (max_iters // _CERT_STRIDE + 2) if trace else 0
         eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
             fp.device_arrays()
-        acc, mu, lat, hop, gap, mu_lb, mu_ub, it, ok = _certified_solve(
-            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
-            demand, hops, fp.num_links, fp.mode, float(offered), util_tol,
-            max_iters, dtype)
+        with rec.span("fluid.evaluate_load", mode=fp.mode, certify=True,
+                      offered=float(offered)) as sp:
+            acc, mu, lat, hop, gap, mu_lb, mu_ub, it, ok, tr = sp.sync(
+                _certified_solve(
+                    eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                    first_edge, demand, hops, fp.num_links, fp.mode,
+                    float(offered), util_tol, max_iters, dtype, trace_cap))
         res = FluidResult(offered=float(offered), accepted=float(acc),
                           max_util=float(mu), mean_latency=float(lat),
                           mean_hops=float(hop))
-        return CertifiedResult(value=res, cert=_certificate(
-            gap, mu_lb, mu_ub, it, ok, util_tol, dtype, kind))
-    split, rho, cost = _run(fp, offered, iters)
-    split = np.asarray(split)
-    rho = np.asarray(rho)
-    cost = np.asarray(cost)
+        return CertifiedResult(
+            value=res,
+            cert=_certificate(gap, mu_lb, mu_ub, it, ok, util_tol, dtype,
+                              kind),
+            trace=_cert_trace(fp.mode, kind, tr) if trace else None)
+    with rec.span("fluid.evaluate_load", mode=fp.mode,
+                  offered=float(offered)) as sp:
+        if trace:
+            eidx, loads_rep, valid, is_min, first_edge, demand_dev, _ = \
+                fp.device_arrays()
+            split, rho, cost, ys = sp.sync(_solve_traced(
+                eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                first_edge, demand_dev, fp.num_links, fp.mode,
+                float(offered), iters))
+        else:
+            split, rho, cost = sp.sync(_run(fp, offered, iters))
+            ys = None
+        split = np.asarray(split)
+        rho = np.asarray(rho)
+        cost = np.asarray(cost)
     max_util = float(rho.max()) if len(rho) else 0.0
     demand = fp.pattern.demand * offered
     wsum = (split * np.where(fp.valid, cost, 0.0)).sum(axis=1)
@@ -935,14 +1200,16 @@ def evaluate_load(fp, offered: float, iters: int = 250,
     hops = float((demand * (split * fp.hops).sum(axis=1)).sum() / max(demand.sum(), _EPS))
     accepted = offered * min(1.0, 1.0 / max(max_util, _EPS))
     return FluidResult(offered=float(offered), accepted=float(accepted),
-                       max_util=max_util, mean_latency=lat, mean_hops=hops)
+                       max_util=max_util, mean_latency=lat, mean_hops=hops,
+                       trace=_fw_trace(fp.mode, [ys]) if trace else None)
 
 
 def saturation_throughput(fp, tol: float = 0.005,
                           iters: int = 250, engine: str = "batched",
                           probe_iters: int = 0, return_info: bool = False,
                           certify: bool = False, util_tol: float = None,
-                          dtype: str = None, cert_iters: int = None):
+                          dtype: str = None, cert_iters: int = None,
+                          trace: bool = False):
     """Largest per-endpoint offered load with max link utilization <= 1
     (bisection; adaptive splits re-equilibrate at every probe).  `fp` is a
     FlowPaths or a sequence of FlowPaths chunks (concatenated on entry).
@@ -966,38 +1233,65 @@ def saturation_throughput(fp, tol: float = 0.005,
     supersedes `return_info` (the certificate's gap replaces the
     truncation-error heuristic) and `probe_iters` (budgets are
     gap-driven).
+
+    With `trace=True` (batched or certified engines) the result carries a
+    `ConvergenceTrace` covering every bisection probe -- per-probe gap /
+    step-size / max-util samples plus a bracket row per probe -- and the
+    uncertified return type becomes `SaturationResult` (its
+    `truncation_err` is NaN unless `return_info` also asked for it).
     """
     fp = _as_flow_paths(fp)
+    rec = get_recorder()
     if certify:
         if return_info:
             raise ValueError("return_info is subsumed by certify=True: the "
                              "certificate's gap bounds the truncation error")
         dtype, util_tol, max_iters, kind = _cert_params(
             fp.mode, util_tol, dtype, iters, cert_iters)
+        trace_cap = (max_iters // _CERT_STRIDE + 2) if trace else 0
         probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
         eidx, loads_rep, valid, is_min, first_edge, demand, _ = \
             fp.device_arrays()
-        sat, lo_c, hi_c, gap, mu_lb, mu_ub, total_it, ok = \
-            _certified_saturation(
-                eidx, loads_rep[1:], loads_rep[0], valid, is_min,
-                first_edge, demand, fp.num_links, fp.mode, util_tol,
-                max_iters, probes, dtype)
+        with rec.span("fluid.saturation_throughput", mode=fp.mode,
+                      certify=True, probes=probes) as sp:
+            sat, lo_c, hi_c, gap, mu_lb, mu_ub, total_it, ok, trs, brs = \
+                sp.sync(_certified_saturation(
+                    eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                    first_edge, demand, fp.num_links, fp.mode, util_tol,
+                    max_iters, probes, dtype, trace_cap))
         return CertifiedResult(
             value=float(sat),
             cert=_certificate(gap, mu_lb, mu_ub, total_it, ok, util_tol,
                               dtype, kind),
-            sat_lo=float(lo_c), sat_hi=float(hi_c))
+            sat_lo=float(lo_c), sat_hi=float(hi_c),
+            trace=_cert_trace(fp.mode, kind, trs, brs) if trace else None)
+    tr = None
     if engine == "batched":
         probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
         sched = ((probe_iters,) * probes if probe_iters > 0
                  else _probe_schedule(iters, probes))
         eidx, loads_rep, valid, is_min, first_edge, demand, _ = \
             fp.device_arrays()
-        sat = float(_saturation_batch(eidx, loads_rep[1:], loads_rep[0],
-                                      valid, is_min, first_edge, demand,
-                                      fp.num_links, fp.mode, iters, sched))
+        with rec.span("fluid.saturation_throughput", mode=fp.mode,
+                      probes=probes) as sp:
+            if trace:
+                sat, yss, brs = sp.sync(_saturation_batch_traced(
+                    eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                    first_edge, demand, fp.num_links, fp.mode, iters,
+                    sched))
+                sat = float(sat)
+                tr = _fw_trace(fp.mode, yss, brs)
+            else:
+                sat = float(sp.sync(_saturation_batch(
+                    eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                    first_edge, demand, fp.num_links, fp.mode, iters,
+                    sched)))
     elif engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
+    elif trace:
+        raise ValueError("trace=True needs engine='batched' or "
+                         "certify=True (the scalar reference re-enters "
+                         "jit per probe and returns no trace buffers)")
     elif evaluate_load(fp, 1.0, iters).max_util <= 1.0:
         sat = 1.0
     else:
@@ -1009,10 +1303,10 @@ def saturation_throughput(fp, tol: float = 0.005,
             else:
                 hi = mid
         sat = lo
-    if not return_info:
+    if not (return_info or trace):
         return sat
-    return SaturationResult(saturation=sat,
-                            truncation_err=truncation_error(fp, sat, iters))
+    terr = truncation_error(fp, sat, iters) if return_info else float("nan")
+    return SaturationResult(saturation=sat, truncation_err=terr, trace=tr)
 
 
 def truncation_error(fp, offered: float, iters: int = 250) -> float:
@@ -1033,46 +1327,76 @@ def truncation_error(fp, offered: float, iters: int = 250) -> float:
 
 def latency_curve(fp, loads, iters: int = 250, engine: str = "batched",
                   certify: bool = False, util_tol: float = None,
-                  dtype: str = None, cert_iters: int = None):
+                  dtype: str = None, cert_iters: int = None,
+                  trace: bool = False):
     """FluidResult per offered load.  engine="batched" (default) evaluates
     every load in one compiled vmapped call; engine="scalar" dispatches
     `evaluate_load` per load (the reference).  `fp` may be a sequence of
     FlowPaths chunks (concatenated on entry).  With `certify=True`, one
     vmapped certified call returning a `CertifiedResult` per load (each
-    wrapping its FluidResult, with a per-load certificate)."""
+    wrapping its FluidResult, with a per-load certificate).  With
+    `trace=True`, each result carries its own per-load
+    `ConvergenceTrace` (the vmapped solve returns the batched sample
+    buffers; they are split per load host-side)."""
     fp = _as_flow_paths(fp)
+    rec = get_recorder()
     loads = [float(l) for l in loads]
     if certify:
         dtype, util_tol, max_iters, kind = _cert_params(
             fp.mode, util_tol, dtype, iters, cert_iters)
+        trace_cap = (max_iters // _CERT_STRIDE + 2) if trace else 0
         eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
             fp.device_arrays()
         vec = jnp.asarray(np.asarray(loads, dtype=dtype))
-        acc, mx, lat, hop, gap, mu_lb, mu_ub, it, ok = _certified_batch(
-            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
-            demand, hops, fp.num_links, fp.mode, vec, util_tol, max_iters,
-            dtype)
+        with rec.span("fluid.latency_curve", mode=fp.mode, certify=True,
+                      points=len(loads)) as sp:
+            acc, mx, lat, hop, gap, mu_lb, mu_ub, it, ok, tr = sp.sync(
+                _certified_batch(
+                    eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                    first_edge, demand, hops, fp.num_links, fp.mode, vec,
+                    util_tol, max_iters, dtype, trace_cap))
+        if trace:
+            parts = [np.asarray(x) for x in tr]
+            traces = [_cert_trace(fp.mode, kind,
+                                  tuple(p[i] for p in parts))
+                      for i in range(len(loads))]
+        else:
+            traces = [None] * len(loads)
         return [CertifiedResult(
                     value=FluidResult(offered=l, accepted=float(a),
                                       max_util=float(m), mean_latency=float(la),
                                       mean_hops=float(h)),
-                    cert=_certificate(g, lb, ub, i, o, util_tol, dtype, kind))
-                for l, a, m, la, h, g, lb, ub, i, o in zip(
+                    cert=_certificate(g, lb, ub, i, o, util_tol, dtype, kind),
+                    trace=t)
+                for l, a, m, la, h, g, lb, ub, i, o, t in zip(
                     loads, np.asarray(acc), np.asarray(mx), np.asarray(lat),
                     np.asarray(hop), np.asarray(gap), np.asarray(mu_lb),
-                    np.asarray(mu_ub), np.asarray(it), np.asarray(ok))]
+                    np.asarray(mu_ub), np.asarray(it), np.asarray(ok),
+                    traces)]
     if engine == "batched":
         eidx, loads_rep, valid, is_min, first_edge, demand, hops = \
             fp.device_arrays()
-        acc, mx, lat, hop = _solve_batch(
-            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
-            demand, hops, fp.num_links, fp.mode,
-            jnp.asarray(np.asarray(loads, dtype=np.float32)), iters)
+        vec = jnp.asarray(np.asarray(loads, dtype=np.float32))
+        with rec.span("fluid.latency_curve", mode=fp.mode,
+                      points=len(loads)) as sp:
+            out = sp.sync(_solve_batch(
+                eidx, loads_rep[1:], loads_rep[0], valid, is_min,
+                first_edge, demand, hops, fp.num_links, fp.mode, vec,
+                iters, trace))
+        if trace:
+            acc, mx, lat, hop, ys = out
+            g, mu, gm = (np.asarray(a) for a in ys)
+            traces = [_fw_trace(fp.mode, [(g[i], mu[i], gm[i])])
+                      for i in range(len(loads))]
+        else:
+            acc, mx, lat, hop = out
+            traces = [None] * len(loads)
         return [FluidResult(offered=l, accepted=float(a), max_util=float(m),
-                            mean_latency=float(la), mean_hops=float(h))
-                for l, a, m, la, h in zip(loads, np.asarray(acc),
-                                          np.asarray(mx), np.asarray(lat),
-                                          np.asarray(hop))]
+                            mean_latency=float(la), mean_hops=float(h),
+                            trace=t)
+                for l, a, m, la, h, t in zip(loads, np.asarray(acc),
+                                             np.asarray(mx), np.asarray(lat),
+                                             np.asarray(hop), traces)]
     if engine != "scalar":
         raise ValueError(f"unknown engine {engine!r}")
-    return [evaluate_load(fp, l, iters) for l in loads]
+    return [evaluate_load(fp, l, iters, trace=trace) for l in loads]

@@ -88,7 +88,8 @@ from .traffic import TrafficPattern
 __all__ = ["BurstSchedule", "PacketWorkload", "PacketResult",
            "make_workload", "build_failure_workload", "remap_edge_space",
            "simulate_packets", "simulate_packets_reference",
-           "simulate_packets_batch", "packet_peak_bytes", "tail_percentiles"]
+           "simulate_packets_batch", "packet_peak_bytes", "tail_percentiles",
+           "occupancy_histogram", "record_occupancy"]
 
 # Paper §VIII-A buffering: 128-flit buffers, 4-flit packets -> 32-packet
 # queues; the same constants the fluid solver's M/D/1 delay model uses
@@ -445,6 +446,47 @@ def packet_peak_bytes(wl: PacketWorkload) -> int:
     resident = 4 * ((e + 1) * wl.capacity + 4 * e)  # queues + occ/serve/etc
     resident += 4 * (2 * f * k * (l1 + 1) + 2 * f)  # eidx/hops/n_valid
     return peak_bytes(p, 7 * 4, resident_bytes=resident)
+
+
+def occupancy_histogram(res: PacketResult,
+                        max_depth: Optional[int] = None) -> np.ndarray:
+    """Per-cycle max-queue-depth histogram: `hist[d]` = cycles whose
+    deepest link queue held exactly `d` packets.  Bins run 0..capacity
+    (or `max_depth`), so saturated runs show mass in the top bin."""
+    cap = res.capacity if max_depth is None else int(max_depth)
+    occ = np.minimum(res.occ_max, cap)
+    return np.bincount(occ, minlength=cap + 1)
+
+
+def record_occupancy(res: PacketResult, name: str = "packet",
+                     recorder=None) -> Dict[str, float]:
+    """Surface a run's per-cycle occupancy traces as obs metrics.
+
+    Both engines already produce `occ_sum` / `occ_max` per cycle; this
+    turns them into a queue-depth histogram, summary gauges, and
+    downsampled time series on the (given or global) recorder, and
+    returns the summary dict.  Host-side numpy only -- the batched
+    engine's scan outputs have already been fetched by the time a
+    `PacketResult` exists."""
+    from ..obs.record import get_recorder
+    rec = recorder if recorder is not None else get_recorder()
+    occ_sum = np.asarray(res.occ_sum)
+    occ_max = np.asarray(res.occ_max)
+    cycles = int(res.cycles)
+    summary = {
+        "cycles": float(cycles),
+        "occ_mean": float(occ_sum.mean()) if cycles else 0.0,
+        "occ_peak": float(occ_max.max(initial=0)),
+        "occ_p99": float(np.percentile(occ_max, 99)) if cycles else 0.0,
+        "saturated_frac": float((occ_max >= res.capacity).mean())
+        if cycles else 0.0,
+    }
+    rec.histogram(f"{name}.queue_depth", np.minimum(occ_max, res.capacity))
+    rec.series(f"{name}.occ_sum", occ_sum)
+    rec.series(f"{name}.occ_max", occ_max)
+    for key, v in summary.items():
+        rec.gauge(f"{name}.{key}", v)
+    return summary
 
 
 # --------------------------------------------------------------------------

@@ -115,13 +115,13 @@ def test_decide_at_early_exit_on_clear_probes():
     # deeply infeasible: the potential-mass bound certifies mu* > 1 in a
     # few strides even though the Bregman bracket never can (the capped
     # integrand is linear above _RHO_CAP)
-    _, _, _, mu_lb, _, it, done = fw.cert_equilibrate(
+    _, _, _, mu_lb, _, it, done, _ = fw.cert_equilibrate(
         fw.init, demand.astype(np.float32) * 0.8, 20000, 0.05, decide_at=1.0)
     assert bool(done)
     assert float(mu_lb) > 1.0
     assert int(it) <= 20 * fluid._CERT_STRIDE
     # deeply feasible: the Bregman upper end certifies mu* <= 1 quickly
-    _, _, _, _, mu_ub, it2, done2 = fw.cert_equilibrate(
+    _, _, _, _, mu_ub, it2, done2, _ = fw.cert_equilibrate(
         fw.init, demand.astype(np.float32) * 0.05, 20000, 0.05,
         decide_at=1.0)
     assert bool(done2)

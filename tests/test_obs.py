@@ -1,0 +1,342 @@
+"""The obs layer's contracts: Chrome-trace JSONL schema (golden file with
+an injected deterministic clock), NullRecorder no-op guarantees and a
+bounded-overhead A/B on the instrumented fluid path, `ConvergenceTrace`
+consistency with the certified solver's `Certificate`, per-block span
+accounting in the blockwise executor (in-process host backend plus an
+8-forced-device sharded subprocess), packet occupancy metrics, and the
+`repro.obs.report` CLI round trip.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.polarfly import build_polarfly
+from repro.core.routing import build_routing
+from repro.obs import NullRecorder, Recorder, get_recorder, recording
+from repro.obs.record import _NULL_SPAN
+from repro.obs.report import load_events, main as report_main, summarize
+from repro.parallel.blockwise import plan_blocks, run_blocks
+from repro.simulation import (build_flow_paths, make_pattern,
+                              make_workload, occupancy_histogram,
+                              record_occupancy, saturation_throughput,
+                              simulate_packets)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "fixtures", "obs", "golden.trace.jsonl")
+
+
+def _pf7_flow_paths(mode="ugal"):
+    pf = build_polarfly(7)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("uniform", rt, p=4, seed=0)
+    kw = {} if mode == "min" else {"k_candidates": 4}
+    return build_flow_paths(rt, pat, mode, seed=5, **kw)
+
+
+# ---------------------------------------------------------------------------
+# recorder: JSONL schema (golden file) + aggregation
+# ---------------------------------------------------------------------------
+
+def _golden_recorder() -> Recorder:
+    """The fixed event sequence the committed golden file was built from.
+
+    The injected clock advances exactly 1us per read, so every ts/dur in
+    the output is a small integer and the JSONL is fully deterministic.
+    """
+    ticks = iter(i / 1e6 for i in range(1000))
+    rec = Recorder(clock=lambda: next(ticks))
+    with rec.span("outer", mode="ugal") as sp:
+        sp.set(probes=2)
+        with rec.span("inner"):
+            pass
+    rec.counter("retrace", 1, devices=8)
+    rec.gauge("sat", 0.375)
+    rec.histogram("depth", [0, 1, 1, 3])
+    rec.series("occ", [0.0, 1.0, 2.0, 3.0], max_points=2)
+    return rec
+
+
+def test_recorder_jsonl_matches_golden_file():
+    got = list(_golden_recorder().lines())
+    with open(GOLDEN, encoding="utf-8") as fh:
+        want = fh.read().splitlines()
+    assert got == want
+
+
+def test_recorder_events_carry_chrome_trace_schema():
+    for ev in _golden_recorder().events():
+        assert set(ev) >= {"name", "ph", "ts", "pid", "tid"}
+        assert ev["ph"] in ("X", "C", "i")
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+        if ev["ph"] == "i":
+            assert "histogram" in ev["args"] or "series" in ev["args"]
+        json.loads(json.dumps(ev))  # every event is JSON-serializable
+
+
+def test_recorder_aggregation_tables():
+    rec = _golden_recorder()
+    spans = rec.span_summary()
+    assert spans["outer"]["count"] == 1 and spans["inner"]["count"] == 1
+    # inner [2us, 3us] nests inside outer [1us, 4us]
+    assert spans["outer"]["total_us"] == 3.0
+    assert spans["inner"]["total_us"] == 1.0
+    met = rec.metrics()
+    assert met["counters"] == {"retrace": 1.0}
+    assert met["gauges"]["sat"]["last"] == 0.375
+    assert met["histograms"]["depth"] == {"0": 1, "1": 2, "3": 1}
+    summ = rec.summary()
+    assert summ["events"] == len(rec.events())
+    assert "outer" in summ["spans"] and summ["gauges"]["sat"] == 0.375
+
+
+def test_recording_restores_previous_recorder():
+    base = get_recorder()
+    rec = Recorder()
+    with recording(rec):
+        assert get_recorder() is rec
+        with recording(Recorder()):
+            assert get_recorder() is not rec
+        assert get_recorder() is rec
+    assert get_recorder() is base
+
+
+# ---------------------------------------------------------------------------
+# null recorder: structurally free
+# ---------------------------------------------------------------------------
+
+def test_null_recorder_is_noop():
+    rec = NullRecorder()
+    # one shared span object, never a fresh allocation per call
+    assert rec.span("a", x=1) is rec.span("b") is _NULL_SPAN
+    with rec.span("a") as sp:
+        sp.set(items=3)
+        assert sp.sync(42) == 42  # passthrough, no jax import needed
+    rec.counter("c")
+    rec.gauge("g", 1.0)
+    rec.histogram("h", [1, 2])
+    rec.series("s", [1.0])
+    assert rec.events() == [] and rec.metrics() == {} and rec.summary() == {}
+
+
+@pytest.mark.slow
+def test_noop_overhead_bounded_on_fluid_path():
+    """The public saturation entry point under the default NullRecorder
+    vs dispatching the underlying jit directly.  The strict 2% bar lives
+    in benchmarks/bench_fluid_engine.py where the measurement is long;
+    here a short run just locks the bound at a generous 1.5x so a
+    structural regression (per-call allocation, eager sync, accidental
+    tracing) fails tier-1 without making the suite timing-sensitive."""
+    if ROOT not in sys.path:  # `benchmarks` is a namespace pkg at the root
+        sys.path.insert(0, ROOT)
+    from benchmarks.common import timed
+
+    from repro.simulation.fluid import _probe_schedule, _saturation_batch
+
+    fp = _pf7_flow_paths("ugal")
+    iters, tol = 256, 0.01
+    probes = max(1, int(np.ceil(np.log2(1.0 / tol))))
+    sched = _probe_schedule(iters, probes)
+    eidx, loads_rep, valid, is_min, first_edge, demand, _ = \
+        fp.device_arrays()
+
+    def raw():
+        return float(_saturation_batch(
+            eidx, loads_rep[1:], loads_rep[0], valid, is_min, first_edge,
+            demand, fp.num_links, fp.mode, iters, sched))
+
+    def pub():
+        return saturation_throughput(fp, tol=tol, iters=iters,
+                                     engine="batched")
+
+    assert raw() == pub()  # compile (shared jit cache underneath)
+    us_raw = min(timed(raw)[1] for _ in range(3))
+    us_pub = min(timed(pub)[1] for _ in range(3))
+    assert us_pub <= 1.5 * us_raw, (us_pub, us_raw)
+
+
+# ---------------------------------------------------------------------------
+# convergence traces
+# ---------------------------------------------------------------------------
+
+def test_certified_trace_matches_certificate_pf13():
+    """The acceptance invariant: on a PF(13) certified saturation,
+    `ConvergenceTrace.final_gap` equals `Certificate.gap` exactly (the
+    last buffer sample is written from the same carried gap value)."""
+    pf = build_polarfly(13)
+    rt = build_routing(pf.graph, pf)
+    pat = make_pattern("uniform", rt, p=7, seed=0)
+    fp = build_flow_paths(rt, pat, "ugal", k_candidates=4, seed=5)
+    res = saturation_throughput(fp, tol=0.01, certify=True, cert_iters=512,
+                                trace=True)
+    tr = res.trace
+    assert tr is not None and tr.kind == res.cert.kind
+    assert tr.final_gap == res.cert.gap
+    assert tr.num_samples > 0 and np.isfinite(tr.gap).all()
+    # one bracket row per probe; the bisection bracket never widens
+    assert tr.brackets.shape[0] == tr.num_probes
+    widths = tr.brackets[:, 3] - tr.brackets[:, 2]
+    assert (np.diff(widths) <= 1e-12).all()
+    assert widths[-1] <= 0.01 + 1e-9
+    # cumulative iteration counts never decrease, probes are ordered
+    assert (np.diff(tr.iters) >= 0).all()
+    assert (np.diff(tr.probe) >= 0).all()
+    # within each probe the conjugate-FW gap converges: the final sample
+    # is the probe's smallest (gap decay is why the probe terminated)
+    for p in range(tr.num_probes):
+        g = tr.probe_slice(p).gap
+        if len(g) > 1:
+            assert g[-1] == g.min()
+
+
+def test_uncertified_trace_is_free_of_side_effects():
+    fp = _pf7_flow_paths("ugal")
+    plain = saturation_throughput(fp, tol=0.05, iters=64, engine="batched")
+    res = saturation_throughput(fp, tol=0.05, iters=64, engine="batched",
+                                trace=True)
+    assert res.saturation == plain  # tracing must not change the result
+    tr = res.trace
+    assert tr.kind == "uncertified" and tr.stride == 1
+    assert np.isnan(tr.util_lb).all() and np.isnan(tr.util_ub).all()
+    assert tr.brackets.shape[0] == tr.num_probes
+    assert np.isnan(res.truncation_err)  # only return_info computes it
+    with pytest.raises(ValueError, match="trace=True"):
+        saturation_throughput(fp, trace=True, engine="scalar")
+
+
+def test_trace_to_metrics_emits_gauges_and_series():
+    fp = _pf7_flow_paths("ugal")
+    res = saturation_throughput(fp, tol=0.05, iters=64, engine="batched",
+                                trace=True)
+    rec = Recorder()
+    res.trace.to_metrics(rec, name="fluid")
+    met = rec.metrics()
+    assert met["gauges"]["fluid.final_gap"]["last"] == res.trace.final_gap
+    names = {ev["name"] for ev in rec.events()}
+    assert {"fluid.gap", "fluid.max_util"} <= names
+
+
+# ---------------------------------------------------------------------------
+# blockwise spans
+# ---------------------------------------------------------------------------
+
+def test_blockwise_emits_one_span_per_block_with_progress():
+    items = np.arange(23, dtype=np.int64)
+    plan = plan_blocks(len(items), block=5, per_item_bytes=16)
+    rec = Recorder()
+    seen = []
+    with recording(rec):
+        out = list(run_blocks(items, plan, lambda b: b * 2, backend="host",
+                              progress=lambda d, t: seen.append((d, t))))
+    assert len(out) == plan.num_blocks
+    spans = [e for e in rec.events()
+             if e["ph"] == "X" and e["name"] == "blockwise.block"]
+    assert len(spans) == plan.num_blocks
+    assert [s["args"]["index"] for s in spans] == list(range(plan.num_blocks))
+    assert all(s["args"]["backend"] == "host" for s in spans)
+    # bytes attr present because the plan knows per_item_bytes; the tail
+    # block (3 items) costs less than the full ones
+    assert spans[0]["args"]["bytes"] == 5 * 16
+    assert spans[-1]["args"]["bytes"] == 3 * 16
+    assert seen == [(i + 1, plan.num_blocks) for i in range(plan.num_blocks)]
+
+
+SCRIPT_8DEV = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax
+assert len(jax.devices()) == 8
+
+from repro.obs import Recorder, recording
+from repro.parallel.blockwise import plan_blocks, run_blocks
+
+items = np.arange(23, dtype=np.int64)  # 5 blocks of 5 over 8 devices
+plan = plan_blocks(len(items), block=5, devices=8, per_item_bytes=16)
+rec = Recorder()
+with recording(rec):
+    out = list(run_blocks(items, plan, lambda b: b * 2, lambda b: b * 2,
+                          backend="sharded"))
+assert len(out) == plan.num_blocks
+spans = [e for e in rec.events()
+         if e["ph"] == "X" and e["name"] == "blockwise.block"]
+assert len(spans) == plan.num_blocks, (len(spans), plan.num_blocks)
+assert all(s["args"]["backend"] == "sharded" for s in spans)
+retraces = [e for e in rec.events() if e["name"] == "blockwise.retrace"]
+assert sum(e["args"]["value"] for e in retraces) >= 1  # fresh fn compiled
+print("OBS_8DEV_OK")
+'''
+
+
+@pytest.mark.slow
+def test_blockwise_spans_on_8_forced_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT_8DEV],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "OBS_8DEV_OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# packet occupancy metrics
+# ---------------------------------------------------------------------------
+
+def test_record_occupancy_consistent_with_result():
+    fp = _pf7_flow_paths("min")
+    wl = make_workload(fp, 0.4, 120, seed=1)
+    res = simulate_packets(wl)
+    hist = occupancy_histogram(res)
+    assert hist.sum() == len(res.occ_max)  # one sample per cycle
+    rec = Recorder()
+    summ = record_occupancy(res, name="pkt", recorder=rec)
+    assert summ["cycles"] == len(res.occ_max)
+    assert summ["occ_peak"] == float(np.max(res.occ_max, initial=0))
+    assert 0.0 <= summ["saturated_frac"] <= 1.0
+    met = rec.metrics()
+    assert met["gauges"]["pkt.occ_peak"]["last"] == summ["occ_peak"]
+    assert sum(met["histograms"]["pkt.queue_depth"].values()) == \
+        summ["cycles"]
+    names = {ev["name"] for ev in rec.events()}
+    assert {"pkt.occ_sum", "pkt.occ_max"} <= names
+
+
+# ---------------------------------------------------------------------------
+# report CLI
+# ---------------------------------------------------------------------------
+
+def test_report_cli_round_trip(tmp_path, capsys):
+    trace = tmp_path / "t.trace.jsonl"
+    _golden_recorder().dump(str(trace))
+    events = load_events(str(trace))
+    assert len(events) == len(_golden_recorder().events())
+    summ = summarize(events)
+    assert "outer" in summ["spans"] and "retrace" in summ["counters"]
+
+    assert report_main([str(trace)]) == 0
+    text = capsys.readouterr().out
+    assert "outer" in text and "depth" in text
+
+    assert report_main([str(trace), "--format", "json"]) == 0
+    parsed = json.loads(capsys.readouterr().out)
+    assert parsed["spans"]["outer"]["count"] == 1
+
+    chrome = tmp_path / "chrome.json"
+    assert report_main([str(trace), "--to-chrome", str(chrome)]) == 0
+    capsys.readouterr()
+    doc = json.loads(chrome.read_text())
+    # metadata event prepended; the rest are the original events
+    assert doc["traceEvents"][0]["ph"] == "M"
+    assert len(doc["traceEvents"]) == len(events) + 1
+
+
+def test_report_rejects_malformed_lines(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"name": "a", "ph": "X", "ts": 0}\nnot json\n')
+    with pytest.raises(ValueError, match="bad.jsonl:2"):
+        load_events(str(bad))
